@@ -1,0 +1,42 @@
+"""Fig. 7 reproduction: latency and optimal Loading-Agent count under
+different memory constraints (planner sweep + engine validation runs)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Hermes
+from benchmarks.common import (PAPER_MODELS, csv_line, emit,
+                               ensure_paper_ckpt, paper_cfg)
+
+
+def run():
+    rows, lines = [], []
+    rng = np.random.default_rng(0)
+    for name, spec in PAPER_MODELS.items():
+        cfg, _ = paper_cfg(name)
+        ckpt = ensure_paper_ckpt(name)
+        h = Hermes(ckpt, cfg)
+        prof = h.profile()
+        lb, other = prof["layer_bytes"], prof["other_bytes"]
+        budgets = [other + k * lb for k in (3, 5, 8, 12)]
+        entries = h.plan(budgets, max_agents=8)
+        seq = 196 if name == "vit_large" else (4 if spec["gen"] else 64)
+        toks = rng.integers(0, cfg.vocab_size, (1, seq))
+        for budget, e in zip(budgets, entries):
+            eng = h.engine(mode="pipeload", budget_bytes=budget,
+                           num_agents=e.num_agents).warmup(1, seq)
+            if spec["gen"]:
+                _, st = eng.run_generate(toks, spec["gen"])
+            else:
+                _, st = eng.run_single(toks)
+            rows.append({"model": name, "budget_mb": budget / 2**20,
+                         "agents": e.num_agents,
+                         "predicted_s": e.predicted_latency_s,
+                         "measured_s": st.latency_s,
+                         "peak_mb": st.peak_bytes / 2**20,
+                         "within_budget": bool(st.peak_bytes <= budget)})
+        lines.append(csv_line(
+            f"fig7_constraints[{name}]", rows[-1]["measured_s"] * 1e6,
+            f"agents@largest_budget={rows[-1]['agents']}"))
+    emit(rows, "fig7_constraints")
+    return lines

@@ -1,0 +1,60 @@
+"""Kernel micro-bench: wall time of the Pallas kernels (interpret mode on
+CPU — correctness-bearing only; the derived column reports achieved
+GFLOP/s for context) vs their jnp oracles."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from benchmarks.common import csv_line, emit
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows, lines = [], []
+
+    m = k = n = 512
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    t_kern = _time(lambda a, b: ops.matmul(a, b, block_m=128, block_n=128,
+                                           block_k=128), x, w)
+    t_ref = _time(lambda a, b: jax.jit(ref.matmul_ref)(a, b), x, w)
+    gflops = 2 * m * k * n / t_kern / 1e9
+    rows.append({"kernel": "streamed_matmul", "t_kernel_s": t_kern,
+                 "t_ref_s": t_ref, "gflops": gflops})
+    lines.append(csv_line("kernel[streamed_matmul_512]", t_kern * 1e6,
+                          f"{gflops:.2f}GFLOP/s(interp)"))
+
+    q = jax.random.normal(key, (4, 256, 64))
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (4, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (4, 256, 64))
+    t_kern = _time(lambda a, b, c: ops.attention(a, b, c, block_q=128,
+                                                 block_k=128), q, kk, v)
+    rows.append({"kernel": "flash_attention", "t_kernel_s": t_kern})
+    lines.append(csv_line("kernel[flash_attention_256]", t_kern * 1e6,
+                          "interp"))
+
+    qd = jax.random.normal(key, (8, 64))
+    kc = jax.random.normal(jax.random.fold_in(key, 4), (8, 1024, 64))
+    vc = jax.random.normal(jax.random.fold_in(key, 5), (8, 1024, 64))
+    valid = jnp.ones((8, 1024), bool)
+    t_kern = _time(lambda a, b, c, d: ops.decode(a, b, c, d, block_k=256),
+                   qd, kc, vc, valid)
+    rows.append({"kernel": "flash_decode", "t_kernel_s": t_kern})
+    lines.append(csv_line("kernel[flash_decode_1k]", t_kern * 1e6, "interp"))
+
+    emit(rows, "kernels")
+    return lines

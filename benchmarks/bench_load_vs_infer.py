@@ -1,0 +1,29 @@
+"""Fig. 3 reproduction: decomposition of loading vs inference latency.
+
+Profiles each paper workload (Layer Profiler) and reports the per-layer
+load/compute ratio (the paper observes ~10x for ~1GB models, ~2x for
+GPT-J)."""
+from __future__ import annotations
+
+from repro.core import Hermes
+from benchmarks.common import (PAPER_MODELS, csv_line, emit,
+                               ensure_paper_ckpt, paper_cfg)
+
+
+def run():
+    rows, lines = [], []
+    for name, spec in PAPER_MODELS.items():
+        cfg, _ = paper_cfg(name)
+        h = Hermes(ensure_paper_ckpt(name), cfg)
+        seq = 196 if name == "vit_large" else 64
+        prof = h.profile(batch=1, seq=seq, force=True)
+        ratio = prof["layer_t_load"] / max(prof["layer_t_comp"], 1e-9)
+        rows.append({"model": name,
+                     "t_load_ms": prof["layer_t_load"] * 1e3,
+                     "t_comp_ms": prof["layer_t_comp"] * 1e3,
+                     "ratio": ratio})
+        lines.append(csv_line(f"fig3_load_ms[{name}]",
+                              prof["layer_t_load"] * 1e6,
+                              f"ratio={ratio:.2f}"))
+    emit(rows, "fig3_load_vs_infer")
+    return lines

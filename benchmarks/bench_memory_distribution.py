@@ -1,0 +1,30 @@
+"""Fig. 2 reproduction: decomposition of per-layer memory usage.
+
+Reports the encoder/decoder-layer share of total model bytes per paper
+workload (the paper observes 70-95%)."""
+from __future__ import annotations
+
+from repro.checkpoint import load_manifest
+from benchmarks.common import (PAPER_MODELS, csv_line, emit,
+                               ensure_paper_ckpt, paper_cfg)
+
+
+def run():
+    rows = []
+    lines = []
+    for name in PAPER_MODELS:
+        cfg, full_layers = paper_cfg(name)
+        man = load_manifest(ensure_paper_ckpt(name))
+        depth_frac = cfg.num_layers / full_layers
+        layer_b = man["layer_bytes"]
+        other_b = man["total_bytes"] - layer_b
+        # extrapolate reduced-depth clones to full depth
+        layer_full = layer_b / depth_frac
+        frac = layer_full / (layer_full + other_b)
+        rows.append({"model": name, "layer_bytes_full": layer_full,
+                     "other_bytes": other_b, "layer_fraction": frac,
+                     "depth_frac": depth_frac})
+        lines.append(csv_line(f"fig2_layer_fraction[{name}]", 0.0,
+                              f"{frac:.3f}"))
+    emit(rows, "fig2_memory_distribution")
+    return lines

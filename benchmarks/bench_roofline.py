@@ -1,0 +1,37 @@
+"""Roofline summary bench: aggregates the committed dry-run artifacts
+(experiments/dryrun/*.json) into the per-(arch x shape) roofline table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ROOT, csv_line, emit
+
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def run():
+    rows, lines = [], []
+    if not DRYRUN.exists():
+        return [csv_line("roofline[missing]", 0.0,
+                         "run repro.launch.dryrun first")]
+    for f in sorted(DRYRUN.glob("*__pod.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "dominant": r["dominant"],
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "useful_flops_ratio": d["useful_flops_ratio"],
+            "fits_hbm": d["memory"]["fits_hbm"],
+            "gib_per_chip": d["memory"]["per_chip_bytes"] / 2**30,
+        })
+        lines.append(csv_line(
+            f"roofline[{d['arch']}|{d['shape']}]", r["bound_s"] * 1e6,
+            f"dominant={r['dominant']};useful={d['useful_flops_ratio']:.2f}"))
+    emit(rows, "roofline_summary")
+    return lines

@@ -1,0 +1,58 @@
+"""Table II reproduction: latency of Baseline / PipeSwitch / PIPELOAD
+(2, 4, 6 Loading Agents) per paper workload; Speedup = T_baseline/T_other.
+
+BERT/ViT: single inference.  GPT-style: prompt 4 tokens, 8 output tokens
+(paper §V-B2 exactly)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PipeloadEngine
+from benchmarks.common import (PAPER_MODELS, csv_line, emit,
+                               ensure_paper_ckpt, paper_cfg)
+
+AGENT_COUNTS = (2, 4, 6)
+
+
+def _run_once(eng, toks, gen):
+    if gen:
+        _, stats = eng.run_generate(toks, gen)
+    else:
+        _, stats = eng.run_single(toks)
+    return stats
+
+
+def run():
+    rows, lines = [], []
+    rng = np.random.default_rng(0)
+    for name, spec in PAPER_MODELS.items():
+        cfg, full_layers = paper_cfg(name)
+        ckpt = ensure_paper_ckpt(name)
+        seq = 196 if name == "vit_large" else (4 if spec["gen"] else 64)
+        toks = rng.integers(0, cfg.vocab_size, (1, seq))
+        gen = spec["gen"]
+
+        res = {"model": name, "depth_frac": cfg.num_layers / full_layers,
+               "gen_tokens": gen}
+        base = PipeloadEngine(ckpt, cfg, mode="baseline").warmup(1, seq)
+        res["baseline_s"] = _run_once(base, toks, gen).latency_s
+        del base
+
+        ps = PipeloadEngine(ckpt, cfg, mode="pipeswitch").warmup(1, seq)
+        res["pipeswitch_s"] = _run_once(ps, toks, gen).latency_s
+        del ps
+
+        for m in AGENT_COUNTS:
+            eng = PipeloadEngine(ckpt, cfg, mode="pipeload",
+                                 num_agents=m).warmup(1, seq)
+            res[f"pipeload{m}_s"] = _run_once(eng, toks, gen).latency_s
+            del eng
+
+        for k in ("pipeswitch_s", *(f"pipeload{m}_s" for m in AGENT_COUNTS)):
+            res[k.replace("_s", "_speedup")] = res["baseline_s"] / res[k]
+        rows.append(res)
+        lines.append(csv_line(
+            f"table2_latency[{name}]", res["pipeload6_s"] * 1e6,
+            f"speedup_vs_baseline={res['pipeload6_speedup']:.2f}"))
+    emit(rows, "table2_latency")
+    return lines

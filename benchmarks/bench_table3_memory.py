@@ -1,0 +1,47 @@
+"""Table III reproduction: peak memory footprints of Baseline / PipeSwitch /
+PIPELOAD (2, 4, 6 agents); Ratio = M_other / M_baseline."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PipeloadEngine
+from benchmarks.common import (PAPER_MODELS, csv_line, emit,
+                               ensure_paper_ckpt, paper_cfg)
+
+AGENT_COUNTS = (2, 4, 6)
+
+
+def run():
+    rows, lines = [], []
+    rng = np.random.default_rng(0)
+    for name, spec in PAPER_MODELS.items():
+        cfg, full_layers = paper_cfg(name)
+        ckpt = ensure_paper_ckpt(name)
+        seq = 196 if name == "vit_large" else (4 if spec["gen"] else 64)
+        toks = rng.integers(0, cfg.vocab_size, (1, seq))
+        gen = spec["gen"]
+
+        res = {"model": name, "depth_frac": cfg.num_layers / full_layers}
+
+        def peak(mode, m=1):
+            eng = PipeloadEngine(ckpt, cfg, mode=mode,
+                                 num_agents=m).warmup(1, seq)
+            if gen:
+                _, st = eng.run_generate(toks, gen)
+            else:
+                _, st = eng.run_single(toks)
+            return st.peak_bytes
+
+        res["baseline_mb"] = peak("baseline") / 2**20
+        res["pipeswitch_mb"] = peak("pipeswitch") / 2**20
+        for m in AGENT_COUNTS:
+            res[f"pipeload{m}_mb"] = peak("pipeload", m) / 2**20
+        for k in ("pipeswitch_mb", *(f"pipeload{m}_mb"
+                                     for m in AGENT_COUNTS)):
+            res[k.replace("_mb", "_ratio")] = res[k] / res["baseline_mb"]
+        rows.append(res)
+        lines.append(csv_line(
+            f"table3_memory[{name}]", 0.0,
+            f"pipeload2_ratio={res['pipeload2_ratio']:.3f}"))
+    emit(rows, "table3_memory")
+    return lines

@@ -1,0 +1,57 @@
+"""Shared benchmark utilities: paper-model checkpoints + result emission."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.models.api import build_model
+
+ROOT = Path(__file__).resolve().parents[1]
+BENCH_DIR = ROOT / "experiments" / "bench"
+CKPT_ROOT = Path("/tmp/repro_bench_ckpts")
+
+# Paper workloads (Table I).  GPT-J uses a reduced-DEPTH clone (6 of 28
+# layers): per-layer bytes/latencies are exact, totals extrapolate by
+# depth — recorded in every emitted row as depth_frac.
+PAPER_MODELS = {
+    "bert_large": {"layers": 24, "gen": 0},
+    "gpt2_base": {"layers": 24, "gen": 8},
+    "vit_large": {"layers": 24, "gen": 0},
+    "gpt_j": {"layers": 6, "gen": 8},
+}
+
+
+def paper_cfg(name: str):
+    spec = PAPER_MODELS[name]
+    cfg = get_config(name)
+    full_layers = cfg.num_layers
+    if spec["layers"] != full_layers:
+        cfg = cfg.with_(num_layers=spec["layers"])
+    return cfg, full_layers
+
+
+def ensure_paper_ckpt(name: str) -> Path:
+    cfg, _ = paper_cfg(name)
+    path = CKPT_ROOT / name
+    if not (path / "manifest.json").exists():
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        partition_and_save(params, cfg, path)
+        del params
+    return path
+
+
+def emit(rows, name: str):
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    (BENCH_DIR / f"{name}.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""Benchmark harness: one bench per paper table/figure + roofline/kernels.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV; detailed rows land in
+experiments/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "fig2": "benchmarks.bench_memory_distribution",
+    "fig3": "benchmarks.bench_load_vs_infer",
+    "table2": "benchmarks.bench_table2_latency",
+    "table3": "benchmarks.bench_table3_memory",
+    "fig7": "benchmarks.bench_fig7_constraints",
+    "roofline": "benchmarks.bench_roofline",
+    "kernels": "benchmarks.bench_kernels",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+
+    import importlib
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = importlib.import_module(BENCHES[name])
+        t0 = time.time()
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} bench(es) failed")
+
+
+if __name__ == "__main__":
+    main()

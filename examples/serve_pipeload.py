@@ -1,0 +1,58 @@
+"""Serve a GPT-2-class model with PIPELOAD under a memory budget.
+
+    PYTHONPATH=src python examples/serve_pipeload.py --budget-mb 400
+
+Shows the full Hermes flow: partition -> profile -> plan -> execute, and
+compares baseline / pipeswitch / pipeload latency+memory on this machine.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint import partition_and_save
+from repro.configs import get_config
+from repro.core import Hermes, PipeloadEngine
+from repro.models.api import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget-mb", type=float, default=400.0)
+    ap.add_argument("--new-tokens", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_config("gpt2_base")
+    ckpt = Path("/tmp/repro_example_gpt2")
+    if not (ckpt / "manifest.json").exists():
+        print("building + partitioning gpt2-base checkpoint (one-off)...")
+        api = build_model(cfg)
+        partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, ckpt)
+
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 4))
+    budget = int(args.budget_mb * 2**20)
+
+    h = Hermes(ckpt, cfg)
+    prof = h.profile(batch=1, seq=4)
+    print(f"profile: t_load={prof['layer_t_load']*1e3:.1f}ms "
+          f"t_comp={prof['layer_t_comp']*1e3:.1f}ms "
+          f"layer={prof['layer_bytes']/2**20:.1f}MB")
+    entry = h.plan([budget])[0]
+    print(f"planner @ {args.budget_mb:.0f}MB -> {entry.num_agents} agents "
+          f"(predicted {entry.predicted_latency_s*1e3:.0f}ms/pass)")
+
+    for mode, agents, bud in [("baseline", 1, None), ("pipeswitch", 1, None),
+                              ("pipeload", entry.num_agents, budget)]:
+        eng = PipeloadEngine(ckpt, cfg, mode=mode, num_agents=agents,
+                             budget_bytes=bud).warmup(1, 4)
+        out, st = eng.run_generate(toks, args.new_tokens)
+        print(f"{mode:10s} m={agents}: {st.latency_s:6.2f}s  "
+              f"peak={st.peak_bytes/2**20:7.1f}MB  loads={st.loads}")
+
+
+if __name__ == "__main__":
+    main()

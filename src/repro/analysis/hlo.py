@@ -1,0 +1,424 @@
+"""HLO-text analysis for the roofline model.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any scan-based
+model (all of ours: layer stacks are scans) is undercounted by the trip
+count, and collective bytes are not exposed at all.  This module parses the
+post-SPMD optimized HLO text into a computation call graph, multiplies each
+computation's costs by its execution count (``known_trip_count`` for while
+bodies, call-site count for fusions/calls), and accumulates per device:
+
+  * dot FLOPs: 2 * result_elems * contracted_elems (trip-count corrected)
+  * an HBM traffic model: every materializing op charges result + operand
+    bytes, with slice-awareness — a fusion that internally dynamic-slices a
+    parameter (the layer-scan weight read) charges only the slice, and a
+    fused in-place dynamic-update-slice (the KV-cache write) charges only
+    2x the update — matching XLA's aliasing behaviour instead of charging
+    whole weight stacks / caches per layer step
+  * collective wire bytes with ring-algorithm factors
+
+Shapes in post-SPMD HLO are per-device shards, so everything here is a
+per-device cost.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_EQ_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_SINGLE_SHAPE_RE = re.compile(r"([\w]+\[[\d,]*\](?:\{[^}]*\})?)")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\((.*)$")
+_BLOCK_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}")
+_GROUPS_ONE_RE = re.compile(r"replica_groups=\{\{([\d,]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {"get-tuple-element", "bitcast", "parameter", "tuple",
+             "after-all", "constant", "iota", "partition-id", "replica-id",
+             "opt-barrier", "reshape", "transpose"}
+_COLLECTIVE_KINDS = {"all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute", "ragged-all-to-all"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpInfo:
+    name: str
+    shape: str
+    kind: str
+    rest: str
+
+    _args: Optional[List[str]] = None
+
+    def args(self) -> List[str]:
+        """Top-level call-argument op names (paren-matched)."""
+        if self._args is None:
+            depth = 1
+            end = len(self.rest)
+            for i, ch in enumerate(self.rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            self._args = _OPERAND_RE.findall(self.rest[:end])
+        return self._args
+
+
+@dataclass
+class Block:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+def _parse_opline(line: str) -> Optional[OpInfo]:
+    m = _NAME_EQ_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape, rem = rest[:end + 1], rest[end + 1:]
+    else:
+        m2 = _SINGLE_SHAPE_RE.match(rest)
+        if not m2:
+            return None
+        shape, rem = m2.group(1), rest[m2.end():]
+    m3 = _KIND_RE.match(rem)
+    if not m3:
+        return None
+    return OpInfo(name=name, shape=shape, kind=m3.group(1), rest=m3.group(2))
+
+
+def parse_blocks(hlo_text: str) -> Dict[str, Block]:
+    blocks: Dict[str, Block] = {}
+    current: Optional[Block] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):            # block header / close
+            hdr = _BLOCK_HDR_RE.match(line)
+            if hdr and line.endswith("{"):
+                current = Block(name=hdr.group(2))
+                blocks[current.name] = current
+                if hdr.group(1):
+                    blocks["__entry__"] = current
+            elif line.strip() == "}":
+                current = None
+            continue
+        if current is None:
+            continue
+        op = _parse_opline(line)
+        if op is None:
+            continue
+        current.ops.append(op)
+        current.symbols[op.name] = op.shape
+    return blocks
+
+
+@dataclass
+class Costs:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, Dict] = field(
+        default_factory=lambda: defaultdict(
+            lambda: {"count": 0.0, "payload_bytes": 0.0, "wire_bytes": 0.0}))
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collectives.items():
+            s = self.collectives[k]
+            s["count"] += v["count"] * mult
+            s["payload_bytes"] += v["payload_bytes"] * mult
+            s["wire_bytes"] += v["wire_bytes"] * mult
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = _GROUPS_V2_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_ONE_RE.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return total_devices
+
+
+def _dot_flops(op: OpInfo, block: Block) -> float:
+    result_elems = 1
+    for d in _shape_dims(op.shape):
+        result_elems *= d
+    contract_elems = 1
+    cm = _CONTRACT_RE.search(op.rest)
+    if cm:
+        operands = op.args()
+        if operands:
+            dims = _shape_dims(block.symbols.get(operands[0], ""))
+            for idx_str in cm.group(1).split(","):
+                if idx_str and int(idx_str) < len(dims):
+                    contract_elems *= dims[int(idx_str)]
+    return 2.0 * result_elems * contract_elems
+
+
+def _operand_bytes(op: OpInfo, block: Block) -> float:
+    return float(sum(_shape_bytes(block.symbols.get(a, ""))
+                     for a in op.args()))
+
+
+def _collective(op: OpInfo, total_devices: int) -> Optional[Tuple[str, Dict]]:
+    kind = op.kind.replace("-start", "")
+    if kind not in _COLLECTIVE_KINDS:
+        return None
+    payload = _shape_bytes(op.shape)
+    if payload == 0:
+        return None
+    n = _group_size(op.rest, total_devices)
+    if n <= 1:
+        return None
+    frac = (n - 1) / n
+    if kind == "all-gather":
+        wire = frac * payload
+    elif kind == "reduce-scatter":
+        wire = (n - 1) * payload
+    elif kind == "all-reduce":
+        wire = 2 * frac * payload
+    elif kind in ("all-to-all", "ragged-all-to-all"):
+        wire = frac * payload
+    else:
+        wire = payload
+    return kind, {"count": 1.0, "payload_bytes": float(payload),
+                  "wire_bytes": float(wire)}
+
+
+_ALIAS_OPS = {"bitcast", "copy", "convert", "reshape", "transpose",
+              "get-tuple-element", "broadcast"}
+
+
+def _fusion_bytes(op: OpInfo, block: Block,
+                  blocks: Dict[str, Block]) -> float:
+    """Slice-aware byte accounting for one fusion call site.
+
+    A fusion that only dynamic-slices a parameter reads the SLICE, not the
+    whole buffer (the layer-scan weight/cache read); a fused in-place
+    dynamic-update-slice writes only the update.  Alias-style ops (bitcast/
+    copy/convert/reshape/transpose) are followed so a `ds(convert(param))`
+    chain still counts as a sliced read — without this, decode steps get
+    billed the whole KV-cache stack per layer (~80x overcount).
+    """
+    result_bytes = float(_shape_bytes(op.shape))
+    callee_m = _CALLS_RE.search(op.rest)
+    callee = blocks.get(callee_m.group(1)) if callee_m else None
+    if callee is None:
+        return result_bytes + _operand_bytes(op, block)
+
+    param_shape: Dict[str, str] = {}
+    for iop in callee.ops:
+        if iop.kind == "parameter":
+            param_shape[iop.name] = iop.shape
+
+    # resolve alias chains: op name -> root param name (or None)
+    root: Dict[str, Optional[str]] = {p: p for p in param_shape}
+
+    def resolve(name: str) -> Optional[str]:
+        seen = set()
+        while name not in root:
+            if name in seen:
+                return None
+            seen.add(name)
+            found = None
+            for iop in callee.ops:
+                if iop.name == name:
+                    if iop.kind in _ALIAS_OPS and iop.args():
+                        found = iop.args()[0]
+                    break
+            if found is None:
+                return None
+            name = found
+        return root[name]
+
+    sliced_read: Dict[str, float] = {}
+    dus_aliased: Dict[str, float] = {}
+    consumed_whole: Dict[str, bool] = {p: False for p in param_shape}
+    for iop in callee.ops:
+        a = iop.args()
+        if not a:
+            continue
+        if iop.kind in ("dynamic-slice", "slice"):
+            p = resolve(a[0])
+            if p is not None:
+                sliced_read[p] = sliced_read.get(p, 0.0) + float(
+                    _shape_bytes(iop.shape))
+                continue
+        if iop.kind == "dynamic-update-slice":
+            p = resolve(a[0])
+            if p is not None:
+                upd = float(_shape_bytes(callee.symbols.get(a[1], "")))
+                dus_aliased[p] = dus_aliased.get(p, 0.0) + upd
+        # any other consumer that references a param directly (not through
+        # a slice) reads it whole.  A dynamic-update-slice's TARGET operand
+        # is written in place, not read — only its update/index operands
+        # count as reads.
+        if iop.kind in ("dynamic-slice", "slice", "parameter"):
+            continue
+        reads = a[1:] if iop.kind == "dynamic-update-slice" else a
+        if iop.kind not in _ALIAS_OPS:
+            for operand in reads:
+                p = resolve(operand)
+                if p is not None:
+                    consumed_whole[p] = True
+
+    total = 0.0
+    aliased_result = False
+    for pname, pshape in param_shape.items():
+        if pname in dus_aliased and not consumed_whole.get(pname):
+            total += 2.0 * dus_aliased[pname]  # read+write the update slot
+            aliased_result = True
+        elif pname in sliced_read and not consumed_whole.get(pname):
+            total += sliced_read[pname]
+        else:
+            total += float(_shape_bytes(pshape))
+    if not aliased_result:
+        total += result_bytes
+    return total
+
+
+def analyze_block(block: Block, blocks: Dict[str, Block],
+                  total_devices: int, memo: Dict[str, Costs],
+                  stack=()) -> Costs:
+    if block.name in memo:
+        return memo[block.name]
+    if block.name in stack:
+        return Costs()
+    costs = Costs()
+    stack = stack + (block.name,)
+    for op in block.ops:
+        coll = _collective(op, total_devices)
+        if coll is not None:
+            kind, stats = coll
+            s = costs.collectives[kind]
+            for k, v in stats.items():
+                s[k] += v
+            continue
+        if op.kind == "while":
+            trip = 1
+            tm = _TRIP_RE.search(op.rest)
+            if tm:
+                trip = int(tm.group(1))
+            bm, cm = _BODY_RE.search(op.rest), _COND_RE.search(op.rest)
+            if bm and bm.group(1) in blocks:
+                costs.add(analyze_block(blocks[bm.group(1)], blocks,
+                                        total_devices, memo, stack), trip)
+            if cm and cm.group(1) in blocks:
+                costs.add(analyze_block(blocks[cm.group(1)], blocks,
+                                        total_devices, memo, stack),
+                          trip + 1)
+            continue  # loop state is aliased; no per-call bytes
+        if op.kind == "fusion":
+            costs.hbm_bytes += _fusion_bytes(op, block, blocks)
+            cm = _CALLS_RE.search(op.rest)
+            if cm and cm.group(1) in blocks:
+                sub = analyze_block(blocks[cm.group(1)], blocks,
+                                    total_devices, memo, stack)
+                costs.dot_flops += sub.dot_flops
+                for k, v in sub.collectives.items():
+                    s = costs.collectives[k]
+                    for kk in ("count", "payload_bytes", "wire_bytes"):
+                        s[kk] += v[kk]
+            continue
+        if op.kind in ("call", "conditional", "async-start"):
+            for callee in (_CALLS_RE.findall(op.rest)
+                           + _BODY_RE.findall(op.rest)):
+                if callee in blocks:
+                    costs.add(analyze_block(blocks[callee], blocks,
+                                            total_devices, memo, stack))
+            continue
+        if op.kind == "dot":
+            costs.dot_flops += _dot_flops(op, block)
+            costs.hbm_bytes += (_shape_bytes(op.shape)
+                                + _operand_bytes(op, block))
+            continue
+        if op.kind == "dynamic-update-slice":
+            a = op.args()
+            upd = _shape_bytes(block.symbols.get(a[1], "")) if len(a) > 1 \
+                else 0
+            costs.hbm_bytes += 2.0 * upd
+            continue
+        if op.kind in ("dynamic-slice", "slice", "copy"):
+            costs.hbm_bytes += 2.0 * _shape_bytes(op.shape)
+            continue
+        if op.kind in _FREE_OPS or op.kind.startswith("async"):
+            continue
+        # Bare elementwise / convert / broadcast / reduce ops: charge the
+        # RESULT only.  The CPU backend fuses far less than the TPU backend;
+        # charging operands too would bill every intermediate twice where
+        # TPU XLA would have fused the chain (documented estimate policy).
+        costs.hbm_bytes += _shape_bytes(op.shape)
+    memo[block.name] = costs
+    return costs
+
+
+def analyze_hlo(hlo_text: str, total_devices: int) -> Dict:
+    """Full-module per-device cost summary (trip-count corrected)."""
+    blocks = parse_blocks(hlo_text)
+    entry = blocks.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, Costs] = {}
+    costs = analyze_block(entry, blocks, total_devices, memo)
+    coll = {k: dict(v) for k, v in costs.collectives.items()}
+    return {
+        "dot_flops": costs.dot_flops,
+        "hbm_bytes": costs.hbm_bytes,
+        "collectives": coll,
+        "collective_wire_bytes": sum(v["wire_bytes"] for v in coll.values()),
+        "collective_count": sum(v["count"] for v in coll.values()),
+    }

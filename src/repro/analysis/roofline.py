@@ -1,0 +1,87 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_wire_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from our trip-count-corrected HLO analyzer
+(``analysis.hlo``) because ``cost_analysis()`` counts scan bodies once;
+both numbers are per-device, so the "chips" division is already implicit.
+MODEL_FLOPS is the analytic 6·N·T / 2·N·T convention (MoE: active params).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import (ENCDEC, MAMBA_HYBRID, MOE, VLM, XLSTM,
+                                 ModelConfig)
+
+
+def params_count(cfg: ModelConfig, params_shape) -> Dict[str, float]:
+    """Exact param counts from the abstract param tree."""
+    total = 0
+    embed = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [e.key for e in path
+                 if isinstance(e, jax.tree_util.DictKey)]
+        total += leaf.size
+        if any(n in ("embed", "lm_head") for n in names):
+            embed += leaf.size
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            expert += leaf.size
+    return {"total": float(total), "embed": float(embed),
+            "expert": float(expert)}
+
+
+def active_params(cfg: ModelConfig, counts: Dict[str, float]) -> float:
+    """Non-embedding active params (MoE: top_k of n_experts active)."""
+    body = counts["total"] - counts["embed"]
+    if cfg.family == MOE and cfg.n_experts:
+        body = body - counts["expert"] * (1 - cfg.top_k / cfg.n_experts)
+    return body
+
+
+def model_flops(cfg: ModelConfig, counts: Dict[str, float], kind: str,
+                global_batch: int, seq_len: int) -> float:
+    """Global analytic FLOPs per step (6NT train / 2NT forward)."""
+    n_act = active_params(cfg, counts)
+    if kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        tokens = global_batch * seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence; attention still reads the whole cache,
+    # which is memory- not FLOP-dominated -> 2·N·B plus cache dot FLOPs.
+    flops = 2.0 * n_act * global_batch
+    if cfg.family not in (XLSTM,):
+        # q.K + p.V over the cache for every layer
+        width = cfg.kv_cache_dim * cfg.num_layers
+        eff_len = seq_len
+        if cfg.sliding_window is not None:
+            eff_len = min(seq_len, cfg.sliding_window)
+        heads_mult = (cfg.n_heads if cfg.attention == "mla" else
+                      cfg.q_heads_per_kv)
+        flops += 2.0 * global_batch * eff_len * width * heads_mult
+    return flops
+
+
+def roofline_terms(hlo_summary: Dict, *, n_chips: int) -> Dict[str, float]:
+    """hlo_summary: output of analysis.hlo.analyze_hlo (per-device)."""
+    compute_s = hlo_summary["dot_flops"] / PEAK_FLOPS_BF16
+    memory_s = hlo_summary["hbm_bytes"] / HBM_BW
+    collective_s = hlo_summary["collective_wire_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+    }

@@ -1,0 +1,2 @@
+from repro.checkpoint.partition import (  # noqa: F401
+    load_manifest, load_shard, partition_and_save, shard_names)

@@ -1,0 +1,102 @@
+"""Layer-based model partitioning (Hermes paper §III-A step ①).
+
+A model checkpoint is pre-processed into per-layer shards on disk:
+
+    <dir>/manifest.json
+    <dir>/embed.npz          # embedding ("other layers" in the paper)
+    <dir>/layer_000.npz ...  # encoder/decoder layers (the 70-95% bulk)
+    <dir>/head.npz           # final norm + lm/classifier head
+
+Each shard is an .npz of named arrays; the manifest records byte sizes and
+kinds so the Pipeline Planner can reason about the schedule without opening
+shards.  Loading a shard is a real disk read (np.load with regular I/O).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> dict:
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def partition_and_save(params: dict, cfg: ModelConfig, path) -> dict:
+    """Split a dense-family param tree (stacked layers) into shards."""
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    params = jax.tree.map(np.asarray, params)
+
+    shards: List[dict] = []
+
+    def save(name: str, tree: dict, kind: str, index: int = -1):
+        flat = _flatten(tree)
+        np.savez(path / f"{name}.npz", **flat)
+        nbytes = int(sum(a.nbytes for a in flat.values()))
+        shards.append({"name": name, "kind": kind, "index": index,
+                       "bytes": nbytes})
+
+    embed_tree = {"embed": params["embed"]}
+    if "patch_proj" in params:
+        embed_tree["patch_proj"] = params["patch_proj"]
+    save("embed", embed_tree, "embed")
+
+    stacked = params["layers"]
+    for i in range(cfg.num_layers):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        save(f"layer_{i:03d}", layer, "layer", i)
+
+    head_tree = {"final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        head_tree["lm_head"] = params["lm_head"]
+    save("head", head_tree, "head")
+
+    manifest = {
+        "model": cfg.name,
+        "num_layers": cfg.num_layers,
+        "dtype": cfg.dtype,
+        "shards": shards,
+        "total_bytes": int(sum(s["bytes"] for s in shards)),
+        "layer_bytes": int(sum(s["bytes"] for s in shards
+                               if s["kind"] == "layer")),
+    }
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def load_manifest(path) -> dict:
+    return json.loads((Path(path) / "manifest.json").read_text())
+
+
+def shard_names(manifest: dict) -> List[str]:
+    return [s["name"] for s in manifest["shards"]]
+
+
+def load_shard(path, name: str) -> dict:
+    """Real disk read -> nested dict of np arrays."""
+    with np.load(Path(path) / f"{name}.npz") as z:
+        flat = {k: z[k] for k in z.files}   # forces the read
+    return _unflatten(flat)

@@ -1,0 +1,51 @@
+"""Config registry: 10 assigned architectures + the 4 Hermes paper models.
+
+``get_config(name)`` returns the full-size ModelConfig; ``--arch <id>`` in
+the launchers resolves through this registry.  Long-context (500k) decode
+uses ``long_variant(cfg)``: sub-quadratic archs pass through unchanged,
+full-attention dense archs switch to their sliding-window variant (see
+DESIGN.md §Shape coverage).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional
+
+from repro.models.config import ModelConfig
+
+_ASSIGNED = [
+    "minicpm3_4b",
+    "qwen3_moe_235b_a22b",
+    "xlstm_1_3b",
+    "qwen2_5_32b",
+    "yi_34b",
+    "zamba2_1_2b",
+    "seamless_m4t_medium",
+    "qwen2_vl_2b",
+    "yi_9b",
+    "qwen3_moe_30b_a3b",
+]
+_PAPER = ["bert_large", "gpt2_base", "vit_large", "gpt_j"]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(_ASSIGNED)
+
+
+def list_paper_models() -> List[str]:
+    return list(_PAPER)
+
+
+def long_variant(cfg: ModelConfig) -> Optional[ModelConfig]:
+    """Config used for the long_500k decode shape, or None if skipped."""
+    mod = importlib.import_module(f"repro.configs.{_norm(cfg.name)}")
+    return getattr(mod, "LONG_CONFIG", cfg)

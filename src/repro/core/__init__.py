@@ -1,0 +1,10 @@
+"""PIPELOAD — the paper's primary contribution.
+
+Execution engine (loading/inference/daemon agents + signals), layer
+profiler, pipeline planner and the Hermes facade tying them together.
+"""
+from repro.core.engine import MODES, PipeloadEngine, RunStats  # noqa: F401
+from repro.core.hermes import Hermes  # noqa: F401
+from repro.core.planner import (PlanEntry, analytic_latency, plan,  # noqa: F401
+                                simulate)
+from repro.core.profiler import profile_model  # noqa: F401

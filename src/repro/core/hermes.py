@@ -1,0 +1,70 @@
+"""Hermes framework facade (paper §IV): Layer Profiler -> Pipeline Planner
+-> Execution Engine, wired together.
+
+    hermes = Hermes(ckpt_dir, cfg)
+    profile = hermes.profile()                  # §IV-1
+    schedule = hermes.plan([b1, b2, None])      # §IV-2
+    logits, stats = hermes.execute(tokens, budget_bytes=b1)   # §IV-3
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core.engine import PipeloadEngine, RunStats
+from repro.core.planner import PlanEntry, plan
+from repro.core.profiler import load_profile, profile_model, save_profile
+from repro.models.config import ModelConfig
+
+
+class Hermes:
+    def __init__(self, ckpt_dir, cfg: ModelConfig):
+        self.dir = Path(ckpt_dir)
+        self.cfg = cfg
+        self._profile: Optional[Dict] = None
+
+    # ---- Layer Profiler ------------------------------------------------
+    def profile(self, *, batch: int = 1, seq: int = 128,
+                force: bool = False) -> Dict:
+        cache = self.dir / "profile.json"
+        if not force and self._profile is not None:
+            return self._profile
+        if not force and cache.exists():
+            self._profile = load_profile(cache)
+            return self._profile
+        self._profile = profile_model(self.dir, self.cfg, batch=batch,
+                                      seq=seq)
+        save_profile(self._profile, cache)
+        return self._profile
+
+    # ---- Pipeline Planner ----------------------------------------------
+    def plan(self, budgets: List[Optional[int]],
+             max_agents: Optional[int] = None) -> List[PlanEntry]:
+        return plan(self.profile(), budgets, max_agents)
+
+    def best_agents(self, budget_bytes: Optional[int]) -> int:
+        return self.plan([budget_bytes])[0].num_agents
+
+    # ---- Execution Engine ----------------------------------------------
+    def engine(self, *, mode: str = "pipeload",
+               budget_bytes: Optional[int] = None,
+               num_agents: Optional[int] = None,
+               pin_window: int = 0) -> PipeloadEngine:
+        if num_agents is None and mode == "pipeload":
+            num_agents = self.best_agents(budget_bytes)
+        return PipeloadEngine(self.dir, self.cfg, mode=mode,
+                              num_agents=num_agents or 1,
+                              budget_bytes=budget_bytes,
+                              pin_window=pin_window)
+
+    def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
+                budget_bytes: Optional[int] = None,
+                num_agents: Optional[int] = None,
+                pin_window: int = 0) -> RunStats:
+        eng = self.engine(mode=mode, budget_bytes=budget_bytes,
+                          num_agents=num_agents, pin_window=pin_window)
+        if generate:
+            _, stats = eng.run_generate(tokens, generate)
+        else:
+            _, stats = eng.run_single(tokens)
+        return stats

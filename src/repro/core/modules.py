@@ -1,0 +1,43 @@
+"""Per-layer executable modules for the PIPELOAD Execution Engine.
+
+The engine operates at shard granularity: ``embed`` -> N x ``layer`` ->
+``head``.  Each module is a jitted full-sequence forward (the paper's
+engine re-runs the pipeline per generated token for GPT-style models, so
+decode is prefix re-inference, matching §V-B2 semantics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.dense_lm import layer_prefill
+from repro.models.config import ModelConfig
+
+
+def build_module_fns(cfg: ModelConfig) -> Dict[str, Callable]:
+    """Returns jitted {embed, layer, head} apply functions."""
+
+    @jax.jit
+    def embed_apply(weights, tokens):
+        return weights["embed"][tokens]
+
+    @jax.jit
+    def layer_apply(weights, x):
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        out, _, _ = layer_prefill(weights, x, cfg, None, positions,
+                                  make_cache=False)
+        return out
+
+    @jax.jit
+    def head_apply(weights, x):
+        h = common.rms_norm(x, weights["final_norm"], cfg.norm_eps)
+        if "lm_head" in weights:
+            return (h[:, -1] @ weights["lm_head"]).astype(jnp.float32)
+        return h[:, -1].astype(jnp.float32)
+
+    return {"embed": embed_apply, "layer": layer_apply, "head": head_apply}

@@ -1,0 +1,167 @@
+"""Pipeline Planner (Hermes §IV-2).
+
+From the Layer Profiler's output it builds a PIPELOAD execution schedule:
+for each memory constraint, the number of Loading Agents that minimises
+latency while the predicted peak stays within budget.
+
+Two prediction tiers, mirroring the paper's "reasonable range, then exact
+pre-run":
+  1. an analytic model for the feasible range of ``m``:
+        T(m) ~ t_load + ceil(N/m - 1) * max(t_load, m*t_comp) + m*t_comp
+        M(m) ~ (m + c) * layer_bytes + other_bytes
+  2. a discrete-event simulation of the engine (the "pre-run") that
+     replays the exact agent striping, in-order inference and destruction
+     to get latency and true peak memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    budget_bytes: Optional[int]
+    num_agents: int
+    predicted_latency_s: float
+    predicted_peak_bytes: int
+    feasible: bool
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: analytic model
+# ---------------------------------------------------------------------------
+def analytic_latency(n_layers: int, m: int, t_load: float,
+                     t_comp: float) -> float:
+    """Pipeline makespan with m parallel loaders, striped L_{i+jm}."""
+    waves = math.ceil(n_layers / m)
+    stage = max(t_load, m * t_comp)
+    return t_load + max(waves - 1, 0) * stage + min(m, n_layers) * t_comp
+
+
+def analytic_peak(m: int, layer_bytes: int, other_bytes: int,
+                  inflight: int = 2) -> int:
+    """~(m + c) layers resident: m loading + c awaiting destruction."""
+    return (m + inflight) * layer_bytes + other_bytes
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: discrete-event simulation (the planner's "pre-run")
+# ---------------------------------------------------------------------------
+def simulate(profile: Dict, m: int,
+             budget_bytes: Optional[int] = None) -> Tuple[float, int]:
+    """Event-driven replay of PIPELOAD.  Returns (latency_s, peak_bytes).
+
+    Models: m loaders (each strictly sequential over its stripe, reserving
+    ledger bytes at load START), one inference agent (in-order), destruction
+    at compute completion, loaders blocked while resident + next > budget
+    (the paper's S_stop), woken at the next destruction.
+    """
+    layers = [s for s in profile["shards"] if s["kind"] == "layer"]
+    n = len(layers)
+    t_load = [s["t_load"] for s in layers]
+    t_comp = [s["t_comp"] for s in layers]
+    nbytes = [s["bytes"] for s in layers]
+    other = profile["other_bytes"]
+
+    resident = other
+    peak = resident
+    stripes = [list(range(i, n, m)) for i in range(m)]
+    agent_pos = [0] * m
+    ready_at = [math.inf] * n
+    loaded_done = [False] * n
+    next_inf = 0
+    inf_free_at = 0.0
+    latency = 0.0
+    blocked: List[int] = []           # agent ids blocked on the budget
+
+    # event heap: (time, seq, kind, payload)
+    seq = 0
+    events: List[Tuple[float, int, str, int]] = []
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, payload))
+        seq += 1
+
+    def try_start_load(a: int, now: float):
+        nonlocal resident, peak
+        if agent_pos[a] >= len(stripes[a]):
+            return
+        k = stripes[a][agent_pos[a]]
+        if budget_bytes is not None and resident + nbytes[k] > budget_bytes \
+                and resident > other:
+            if a not in blocked:
+                blocked.append(a)     # S_stop: wait for a destruction
+            return
+        resident += nbytes[k]         # ledger reserve at load start
+        peak = max(peak, resident)
+        agent_pos[a] += 1
+        push(now + t_load[k], "load_done", (a << 20) | k)
+
+    for a in range(m):
+        try_start_load(a, 0.0)
+    if not events and n > 0:
+        return math.inf, peak         # budget below a single layer
+
+    guard = 0
+    while events and guard < 20 * n + 100:
+        guard += 1
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == "load_done":
+            a, k = payload >> 20, payload & ((1 << 20) - 1)
+            ready_at[k] = now
+            loaded_done[k] = True
+            try_start_load(a, now)    # next stripe item (may block)
+            # inference agent: start any now-unblocked in-order layers
+            while next_inf < n and loaded_done[next_inf]:
+                start = max(ready_at[next_inf], inf_free_at)
+                inf_free_at = start + t_comp[next_inf]
+                push(inf_free_at, "inf_done", next_inf)
+                next_inf += 1
+        else:  # inf_done -> destruction (daemon) frees bytes, wakes loaders
+            k = payload
+            resident -= nbytes[k]
+            latency = max(latency, now)
+            waiting, blocked[:] = list(blocked), []
+            for a in waiting:
+                try_start_load(a, now)   # re-appends itself if still blocked
+    if next_inf < n:
+        return math.inf, peak         # could not finish (budget deadlock)
+    return latency, peak
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+def plan(profile: Dict, budgets: List[Optional[int]],
+         max_agents: Optional[int] = None) -> List[PlanEntry]:
+    n = profile["num_layers"]
+    t_load = profile["layer_t_load"]
+    t_comp = profile["layer_t_comp"]
+    lb = profile["layer_bytes"]
+    other = profile["other_bytes"]
+    max_m = max_agents or min(n, 12)
+
+    entries: List[PlanEntry] = []
+    for budget in budgets:
+        best: Optional[PlanEntry] = None
+        # tier 1: feasible range
+        feasible_ms = [m for m in range(1, max_m + 1)
+                       if budget is None
+                       or analytic_peak(m, lb, other) <= budget]
+        if not feasible_ms:
+            feasible_ms = [1]
+        # tier 2: exact pre-run on the feasible range
+        for m in feasible_ms:
+            lat, peak = simulate(profile, m, budget)
+            ok = math.isfinite(lat) and (budget is None or peak <= budget)
+            cand = PlanEntry(budget, m, lat, int(peak), ok)
+            if best is None or (cand.feasible and not best.feasible) or (
+                    cand.feasible == best.feasible
+                    and cand.predicted_latency_s < best.predicted_latency_s):
+                best = cand
+        entries.append(best)
+    return entries

@@ -1,0 +1,86 @@
+"""Layer Profiler (Hermes §IV-1).
+
+Measures, per shard of a partitioned checkpoint: load time (real disk ->
+host -> device), compute time (jitted forward after warmup) and byte size.
+The profile feeds the Pipeline Planner.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.partition import load_manifest, load_shard
+from repro.core.modules import build_module_fns
+from repro.models.config import ModelConfig
+
+
+def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
+                  seq: int = 128, repeats: int = 3) -> Dict:
+    ckpt_dir = Path(ckpt_dir)
+    manifest = load_manifest(ckpt_dir)
+    fns = build_module_fns(cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                         jnp.int32)
+
+    profile = {"model": cfg.name, "batch": batch, "seq": seq, "shards": []}
+    x = None
+    for shard in manifest["shards"]:
+        name, kind = shard["name"], shard["kind"]
+        # ---- load time (disk -> device), cold-ish: re-read every repeat
+        t_loads = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            w = jax.tree.map(jnp.asarray, load_shard(ckpt_dir, name))
+            jax.tree.map(lambda a: a.block_until_ready(), w)
+            t_loads.append(time.perf_counter() - t0)
+        # ---- compute time
+        if kind == "embed":
+            fn = lambda w_, x_: fns["embed"](w_, tokens)
+            x_in = tokens
+        elif kind == "layer":
+            fn = lambda w_, x_: fns["layer"](w_, x_)
+            x_in = x
+        else:
+            fn = lambda w_, x_: fns["head"](w_, x_)
+            x_in = x
+        out = fn(w, x_in)
+        out.block_until_ready()          # warmup/compile
+        t_comps = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn(w, x_in)
+            out.block_until_ready()
+            t_comps.append(time.perf_counter() - t0)
+        if kind == "embed":
+            x = out
+        elif kind == "layer":
+            x = out
+        profile["shards"].append({
+            "name": name, "kind": kind, "bytes": shard["bytes"],
+            "t_load": float(np.median(t_loads)),
+            "t_comp": float(np.median(t_comps)),
+        })
+
+    layers = [s for s in profile["shards"] if s["kind"] == "layer"]
+    profile["layer_t_load"] = float(np.median([s["t_load"] for s in layers]))
+    profile["layer_t_comp"] = float(np.median([s["t_comp"] for s in layers]))
+    profile["layer_bytes"] = int(np.median([s["bytes"] for s in layers]))
+    profile["other_bytes"] = int(sum(s["bytes"] for s in profile["shards"]
+                                     if s["kind"] != "layer"))
+    profile["num_layers"] = len(layers)
+    return profile
+
+
+def save_profile(profile: Dict, path):
+    Path(path).write_text(json.dumps(profile, indent=1))
+
+
+def load_profile(path) -> Dict:
+    return json.loads(Path(path).read_text())

@@ -1,0 +1,94 @@
+"""Causal flash attention (prefill hot-spot) as a Pallas TPU kernel.
+
+Grid (batch*kv_heads*q_groups, Sq/bq, Sk/bk): the innermost grid dim streams
+K/V blocks HBM -> VMEM while the MXU works on the previous block (PIPELOAD's
+overlap at the attention level).  Online-softmax running stats (m, l) and
+the f32 output accumulator live in VMEM scratch across the Sk dimension.
+
+Layout: q (BH, Sq, dh), k/v (BH, Sk, dh) — callers fold batch/head dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k: int, block_q: int, block_k: int, scale: float,
+                  causal: bool, window: Optional[int]):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_ids = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_ids = kk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    s = jnp.dot(q_ref[0] * scale, k_ref[0].T,
+                preferred_element_type=jnp.float32)      # (bq, bk)
+    if causal:
+        s = jnp.where(k_ids <= q_ids, s, NEG_INF)
+    if window is not None:
+        s = jnp.where(k_ids > q_ids - window, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(kk == n_k - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, dh); k, v: (BH, Sk, dh) -> (BH, Sq, dh)."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, ((sq, sk), (bq, bk))
+    n_k = sk // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    kern = functools.partial(
+        _flash_kernel, n_k=n_k, block_q=bq, block_k=bk, scale=scale,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum
+            pltpu.VMEM((bq, dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware (the TARGET is TPU: compiled BlockSpec pipelines;
+interpret=True executes the kernel bodies in Python for validation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash_attn
+from repro.kernels.flash_decode import (flash_decode as _flash_decode,
+                                        flash_decode_partial as _fd_partial)
+from repro.kernels.streamed_matmul import streamed_matmul as _matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x, w, *, block_m: int = 256, block_n: int = 256,
+           block_k: int = 512):
+    return _matmul(x, w, block_m=block_m, block_n=block_n, block_k=block_k,
+                   interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, block_q: int = 256,
+              block_k: int = 256):
+    return _flash_attn(q, k, v, causal=causal, window=window,
+                       block_q=block_q, block_k=block_k,
+                       interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode(q, k, v, valid, *, block_k: int = 512):
+    return _flash_decode(q, k, v, valid, block_k=block_k,
+                         interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_partial(q, k, v, valid, *, block_k: int = 512):
+    return _fd_partial(q, k, v, valid, block_k=block_k,
+                       interpret=not _on_tpu())

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (BH, Sq, dh); k, v: (BH, Sk, dh)."""
+    _, sq, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_ids = jnp.arange(sq)[:, None]
+    k_ids = jnp.arange(sk)[None, :]
+    if causal:
+        s = jnp.where(k_ids <= q_ids, s, NEG_INF)
+    if window is not None:
+        s = jnp.where(k_ids > q_ids - window, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+               valid: jax.Array) -> jax.Array:
+    """q: (BH, dh); k, v: (BH, S, dh); valid: (BH, S)."""
+    dh = q.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bd,bsd->bs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bs,bsd->bd", p,
+                      v.astype(jnp.float32)).astype(v.dtype)
+
+
+def decode_partial_ref(q, k, v, valid):
+    """Unnormalised (o, m, l) partials matching flash_decode_partial."""
+    dh = q.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bd,bsd->bs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bs,bsd->bd", p, v.astype(jnp.float32))
+    return o, m, l

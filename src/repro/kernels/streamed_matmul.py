@@ -1,0 +1,59 @@
+"""Streamed (weight-streaming) matmul Pallas kernel.
+
+The VMEM tier of PIPELOAD: weight tiles stream HBM -> VMEM through
+``pallas_call``'s grid pipeline — while tile (i, j, k) is in the MXU, tile
+(i, j, k+1) is being DMA'd.  This is the paper's loading-agent/inference-
+agent overlap at VMEM granularity (the pipeline's in-flight buffer count is
+the analogue of the agent count), and the "destroy after use" policy is the
+pipeline's automatic tile recycling.
+
+Grid (M/bm, N/bn, K/bk); f32 VMEM scratch accumulator; MXU-aligned
+(128-multiple) tile defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def streamed_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 256,
+                    block_n: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N).  Requires divisible tiling."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,84 @@
+"""Serving launcher: PIPELOAD-backed batched inference.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-base \
+        --budget-mb 600 --requests 4 --new-tokens 8
+
+Builds (or reuses) a layer-partitioned checkpoint, profiles it, lets the
+Pipeline Planner pick the Loading-Agent count for the memory budget, and
+serves batched requests through the Execution Engine.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import partition_and_save
+from repro.configs import get_config
+from repro.core import Hermes
+from repro.models.api import build_model
+
+CKPT_ROOT = Path("/tmp/repro_ckpts")
+
+
+def ensure_checkpoint(cfg, seed: int = 0) -> Path:
+    path = CKPT_ROOT / cfg.name.replace("/", "_")
+    if not (path / "manifest.json").exists():
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(seed))
+        partition_and_save(params, cfg, path)
+    return path
+
+
+def run(arch: str, *, budget_mb: float | None = None, requests: int = 2,
+        prompt_len: int = 16, new_tokens: int = 8, reduced: bool = True,
+        num_agents: int | None = None, pin_window: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced().with_(num_layers=8)
+    ckpt = ensure_checkpoint(cfg)
+    hermes = Hermes(ckpt, cfg)
+    budget = int(budget_mb * 2**20) if budget_mb else None
+
+    plan = hermes.plan([budget])[0]
+    print(f"planner: budget={budget_mb}MB -> {plan.num_agents} agents, "
+          f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
+          f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
+
+    eng = hermes.engine(mode="pipeload", budget_bytes=budget,
+                        num_agents=num_agents or plan.num_agents,
+                        pin_window=pin_window)
+    eng.warmup(requests, prompt_len)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
+    t0 = time.time()
+    out, stats = eng.run_generate(toks, new_tokens)
+    dt = time.time() - t0
+    print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
+          f"({requests*new_tokens/dt:.1f} tok/s), "
+          f"peak {stats.peak_bytes/2**20:.0f}MB, {stats.loads} shard loads")
+    return out, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2_base")
+    ap.add_argument("--budget-mb", type=float, default=None)
+    ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--num-agents", type=int, default=None)
+    ap.add_argument("--pin-window", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
+        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+        reduced=not args.full, num_agents=args.num_agents,
+        pin_window=args.pin_window)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Abstract input specs + sharding specs for every (arch x shape x mesh).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every model input of a given step kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import ModelAPI, build_model, param_pspecs
+from repro.models.config import (ENCDEC, MAMBA_HYBRID, MOE, VLM, XLSTM,
+                                 ModelConfig)
+from repro.sharding import ShardingCtx
+from repro.launch.mesh import batch_axes_of
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def make_ctx(mesh, shape: InputShape) -> ShardingCtx:
+    baxes = batch_axes_of(mesh)
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    return ShardingCtx(mesh=mesh, batch_axes=baxes, model_axis="model",
+                       shard_batch=shape.global_batch % nb == 0
+                       and shape.global_batch >= nb)
+
+
+# ---------------------------------------------------------------------------
+# Batch input specs (ShapeDtypeStructs) per step kind
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == VLM:
+        s_text = s - cfg.num_patches
+        assert s_text > 0
+        out["patches"] = sds((b, cfg.num_patches, cfg.d_model), jnp.float32)
+        out["tokens"] = sds((b, s_text), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = sds((b, s_text), jnp.int32)
+        return out
+    if cfg.family == ENCDEC:
+        out["frames"] = sds((b, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    out["tokens"] = sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape,
+                 ctx: ShardingCtx) -> Dict[str, P]:
+    bs = ctx.batch_spec
+    names = batch_specs(cfg, shape)
+    return {k: P(bs) for k in names}
+
+
+# ---------------------------------------------------------------------------
+# KV/state cache specs + pspecs
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    s = shape.seq_len
+    if cfg.sliding_window is not None:
+        return min(s, cfg.sliding_window)
+    return s
+
+
+def cache_specs(api: ModelAPI, cfg: ModelConfig,
+                shape: InputShape) -> Any:
+    b = shape.global_batch
+    s = cache_len(cfg, shape)
+    return jax.eval_shape(lambda: api.empty_cache(b, s))
+
+
+def cache_pspecs(cfg: ModelConfig, shape: InputShape,
+                 ctx: ShardingCtx) -> Any:
+    """PartitionSpec tree matching the family's cache structure."""
+    bs, ax = ctx.batch_spec, ctx.model_axis
+    # Only shard the cache sequence dim when every shard gets >= 1 slot.
+    s = cache_len(cfg, shape)
+    seq_ax = ax if s % ctx.model_size == 0 else None
+
+    if cfg.family == XLSTM:
+        m = {"c": P(None, None, bs, None, None, None),
+             "n": P(None, None, bs, None, None)}
+        s_ = {k: P(None, bs, None) for k in ("c", "n", "m", "h")}
+        return {"mlstm": m, "slstm": s_}
+    if cfg.family == MAMBA_HYBRID:
+        return {
+            "mamba": {"ssm": P(None, bs, None, None, None),
+                      "conv": P(None, bs, None, None)},
+            "attn": {"k": P(None, bs, seq_ax, None, None),
+                     "v": P(None, bs, seq_ax, None, None)},
+        }
+    if cfg.family == ENCDEC:
+        enc_seq_ax = ax if cfg.enc_seq_len % ctx.model_size == 0 else None
+        kv = lambda a: {"k": P(None, bs, a, None, None),
+                        "v": P(None, bs, a, None, None)}
+        return {"self": kv(seq_ax), "cross": kv(enc_seq_ax)}
+    if cfg.attention == "mla":
+        return {"c": P(None, bs, seq_ax, None),
+                "kr": P(None, bs, seq_ax, None)}
+    return {"k": P(None, bs, seq_ax, None, None),
+            "v": P(None, bs, seq_ax, None, None)}
+
+
+def decode_ctx(cfg: ModelConfig, shape: InputShape,
+               mesh) -> ShardingCtx:
+    """Ctx for the decode path: flash-decode shard_map needs the cache seq
+    dim sharded on the model axis; disable when it does not divide."""
+    ctx = make_ctx(mesh, shape)
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# FSDP-style storage sharding for parameters / optimizer state
+# ---------------------------------------------------------------------------
+def fsdp_pspecs(params_shape, mesh, base_specs) -> Any:
+    """Extend ``base_specs`` by sharding the largest unsharded dim of every
+    large leaf over the data axis (ZeRO-3 storage; XLA all-gathers
+    just-in-time inside the layer scan)."""
+    data_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if "data" not in data_axes:
+        return base_specs
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    fsdp_axis = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def f(path, leaf, spec: P):
+        names = {e.key for e in path
+                 if isinstance(e, jax.tree_util.DictKey)}
+        if names & {"embed", "lm_head"}:
+            return spec  # vocab-sharded already; fsdp'ing them only makes
+                         # the token-gather resharding pathological
+        if leaf.size * jnp.dtype(leaf.dtype).itemsize < 1 << 20:
+            return spec  # small leaves stay as-is
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # choose the largest dim not already sharded and divisible
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if entries[i] is None and leaf.shape[i] % dsize == 0:
+                entries[i] = fsdp_axis
+                return P(*entries)
+        # fall back to 'data' only when the combined axis doesn't divide
+        if len(data_axes) > 1:
+            dd = mesh.shape["data"]
+            for i in order:
+                if entries[i] is None and leaf.shape[i] % dd == 0:
+                    entries[i] = "data"
+                    return P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        f, params_shape, base_specs)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,74 @@
+"""Step functions (train / prefill / serve) used by launchers and dry-run."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.optim import adamw_init, adamw_update, cosine_lr
+from repro.sharding import ShardingCtx
+
+
+def make_train_step(api: ModelAPI, ctx: Optional[ShardingCtx],
+                    grad_accum: int = 1):
+    """Train step with optional gradient accumulation: the global batch is
+    split into ``grad_accum`` microbatches scanned sequentially (f32 grad
+    accumulator), shrinking peak activation memory by ~grad_accum while
+    keeping the update semantics of the full batch."""
+
+    def value_and_grads(params, batch):
+        def lf(p, b):
+            return api.loss(p, b, ctx)
+
+        if grad_accum <= 1:
+            return jax.value_and_grad(lf, has_aux=True)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                acc_g, grads)
+            return (acc_g, acc_l + loss / grad_accum), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), metrics_stack = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro)
+        metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
+        return (loss, metrics), grads
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = value_and_grads(params, batch)
+        lr = cosine_lr(opt_state["step"] + 1)   # step counts from 1
+        params2, opt2 = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill_step(api: ModelAPI, ctx: Optional[ShardingCtx]):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, ctx)
+
+    return prefill_step
+
+
+def make_serve_step(api: ModelAPI, ctx: Optional[ShardingCtx]):
+    def serve_step(params, tokens, cache, pos):
+        return api.decode(params, tokens, cache, pos, ctx)
+
+    return serve_step

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 50 \
+        --batch 8 --seq 256 [--reduced] [--model-axis 1]
+
+On the production pod the same step function is what dryrun.py lowers; on
+this host it runs the reduced configs end-to-end (examples/quickstart.py
+drives a ~100M-param run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import batch_iterator
+from repro.launch.mesh import batch_axes_of, make_host_mesh
+from repro.launch.stepfns import make_train_step
+from repro.models.api import build_model, param_pspecs
+from repro.launch.specs import named
+from repro.optim import adamw_init
+from repro.sharding import ShardingCtx
+
+
+def run(arch: str, *, steps: int = 20, batch: int = 8, seq: int = 256,
+        reduced: bool = True, model_axis: int = 1, log_every: int = 10,
+        seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+
+    ctx = None
+    if model_axis > 1 and len(jax.devices()) >= model_axis:
+        mesh = make_host_mesh(model=model_axis)
+        ctx = ShardingCtx(mesh=mesh, batch_axes=batch_axes_of(mesh),
+                          model_axis="model",
+                          shard_batch=batch % mesh.shape["data"] == 0)
+
+    params = api.init(jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    if ctx is not None:
+        shardings = named(ctx.mesh, param_pspecs(params, ctx.mesh))
+        params = jax.device_put(params, shardings)
+
+    step = jax.jit(make_train_step(api, ctx), donate_argnums=(0, 1))
+    it = batch_iterator(cfg, batch, seq, seed=seed)
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        b = next(it)
+        params, opt_state, metrics = step(params, opt_state, b)
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (pod target; host will OOM)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+    losses = run(args.arch, steps=args.steps, batch=args.batch,
+                 seq=args.seq, reduced=not args.full,
+                 model_axis=args.model_axis)
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.api import ModelAPI, build_model, param_pspecs  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,0 +1,161 @@
+"""Uniform model API across families + parameter partition-spec rules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import dense_lm, encdec_lm, recurrent_lm
+from repro.models.config import (DENSE, ENCDEC, MAMBA_HYBRID, MOE, VLM,
+                                 XLSTM, ModelConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]          # (key) -> params
+    loss: Callable[..., Any]          # (params, batch, ctx) -> (loss, metrics)
+    prefill: Callable[..., Any]       # (params, batch, ctx) -> (logits, cache)
+    decode: Callable[..., Any]        # (params, tok, cache, pos, ctx) -> ...
+    empty_cache: Callable[..., Any]   # (batch, seq, dtype?) -> cache
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    cfg.validate()
+    if cfg.family in (DENSE, MOE, VLM):
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda k: dense_lm.init_params(k, cfg),
+            loss=lambda p, b, ctx=None: dense_lm.loss_fn(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None: dense_lm.prefill_fn(p, b, cfg, ctx),
+            decode=lambda p, t, c, pos, ctx=None: dense_lm.decode_fn(
+                p, t, c, pos, cfg, ctx),
+            empty_cache=lambda b, s, dt=None: dense_lm.empty_cache(
+                cfg, b, s, dt),
+        )
+    if cfg.family == ENCDEC:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda k: encdec_lm.init_params(k, cfg),
+            loss=lambda p, b, ctx=None: encdec_lm.loss_fn(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None: encdec_lm.prefill_fn(p, b, cfg, ctx),
+            decode=lambda p, t, c, pos, ctx=None: encdec_lm.decode_fn(
+                p, t, c, pos, cfg, ctx),
+            empty_cache=lambda b, s, dt=None: encdec_lm.empty_cache(
+                cfg, b, s, dt),
+        )
+    if cfg.family == XLSTM:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda k: recurrent_lm.xlstm_init(k, cfg),
+            loss=lambda p, b, ctx=None: recurrent_lm.xlstm_loss(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None: recurrent_lm.xlstm_prefill(
+                p, b, cfg, ctx),
+            decode=lambda p, t, c, pos, ctx=None: recurrent_lm.xlstm_decode(
+                p, t, c, pos, cfg, ctx),
+            empty_cache=lambda b, s, dt=None: recurrent_lm.xlstm_empty_state(
+                cfg, b),
+        )
+    if cfg.family == MAMBA_HYBRID:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda k: recurrent_lm.zamba_init(k, cfg),
+            loss=lambda p, b, ctx=None: recurrent_lm.zamba_loss(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx=None: recurrent_lm.zamba_prefill(
+                p, b, cfg, ctx),
+            decode=lambda p, t, c, pos, ctx=None: recurrent_lm.zamba_decode(
+                p, t, c, pos, cfg, ctx),
+            empty_cache=lambda b, s, dt=None: recurrent_lm.zamba_empty_cache(
+                cfg, b, s, dt),
+        )
+    raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# Partition specs for parameters (and optimizer state, which mirrors them)
+# ===========================================================================
+# rule: leaf-name -> (base_ndim, spec for the unstacked leaf)
+_NAME_RULES = {
+    "embed": (2, ("model", None)),
+    "lm_head": (2, (None, "model")),
+    "w_q": (2, (None, "model")),
+    "w_k": (2, (None, "model")),
+    "w_v": (2, (None, "model")),
+    "w_o": (2, ("model", None)),
+    "b_q": (1, ("model",)),
+    "b_k": (1, ("model",)),
+    "b_v": (1, ("model",)),
+    "w_up": (2, (None, "model")),
+    "w_gate": (2, (None, "model")),
+    "w_down": (2, ("model", None)),
+    # MLA up-projections (low-rank downs stay replicated by default)
+    "w_uq_nope": (2, (None, "model")),
+    "w_uq_rope": (2, (None, "model")),
+    "w_uk": (2, (None, "model")),
+    "w_uv": (2, (None, "model")),
+}
+# 3D expert weights (E, D, F): shard the expert dim on the model axis
+_MOE_RULES = {
+    "w_gate": (3, ("model", None, None)),
+    "w_up": (3, ("model", None, None)),
+    "w_down": (3, ("model", None, None)),
+}
+
+
+def _spec_for_leaf(path, leaf) -> P:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    if name is None:
+        return P()
+    in_moe = any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+                 for e in path)
+    rule = None
+    if in_moe:
+        rule = _MOE_RULES.get(name)       # router & norms fall through to P()
+        if rule is None and name == "router":
+            return P()
+    elif name in _NAME_RULES:
+        rule = _NAME_RULES[name]
+    if rule is None:
+        return P()
+    base_ndim, spec = rule
+    extra = leaf.ndim - base_ndim
+    if extra < 0:
+        return P()
+    return P(*((None,) * extra + tuple(spec)))
+
+
+def _shard_size_ok(leaf, spec: P, mesh_shape: dict) -> bool:
+    for dim, ax in zip(leaf.shape, spec):
+        if ax is None:
+            continue
+        n = mesh_shape.get(ax, 1)
+        if dim % n:
+            return False
+    return True
+
+
+def param_pspecs(params_shape, mesh=None):
+    """Pytree of PartitionSpec matching ``params_shape`` (arrays or
+    ShapeDtypeStructs).  Falls back to replication when a dim does not
+    divide the mesh axis."""
+    mesh_shape = dict(mesh.shape) if mesh is not None else {}
+
+    def f(path, leaf):
+        spec = _spec_for_leaf(path, leaf)
+        if mesh is not None and not _shard_size_ok(leaf, spec, mesh_shape):
+            return P()
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def is_moe_leaf(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+               for e in path)

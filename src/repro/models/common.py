@@ -1,0 +1,141 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, initializers."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers.  Param trees are plain nested dicts of jnp arrays.
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def zeros(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotary half of ``head_dim``."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                      # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: Sequence[int], theta: float) -> jax.Array:
+    """Multimodal rotary (Qwen2-VL).  positions3: (3, ..., seq) t/h/w ids.
+
+    The rotary half is split into ``sections`` (sum == head_dim // 2); each
+    section takes its angle from the matching position stream.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)                      # (half,)
+    # (3, ..., seq, half) angles, then pick sections per stream.
+    ang_all = positions3[..., None].astype(jnp.float32) * inv
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                  # (..., seq, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    if "w_gate" in params:
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materialises (B, S, V) at once)
+# ---------------------------------------------------------------------------
+def chunked_softmax_xent(hidden: jax.Array, lm_head: jax.Array,
+                         labels: jax.Array, n_chunks: int = 8) -> jax.Array:
+    """hidden: (B, S, D); lm_head: (D, V); labels: (B, S) int32.
+
+    Scans over sequence chunks so the peak logits tensor is (B, S/c, V).
+    Returns mean token loss (float32).
+    """
+    b, s, d = hidden.shape
+    while s % n_chunks:
+        n_chunks //= 2
+    hs = hidden.reshape(b, n_chunks, s // n_chunks, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+
+    # checkpoint: the backward recomputes each chunk's logits instead of
+    # keeping the full (B, S, V) residual alive ("fused" cross-entropy).
+    @jax.checkpoint
+    def body(tot, xs):
+        h, y = xs
+        logits = (h @ lm_head).astype(jnp.float32)         # (B, s/c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)

@@ -1,0 +1,260 @@
+"""Decoder-only language models: dense GQA, dense MLA, MoE, VLM (M-RoPE).
+
+Layer stacks are ``lax.scan`` over stacked per-layer params so the lowered
+HLO is one layer body regardless of depth (94-layer MoE lowers as fast as a
+2-layer smoke model).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, moe
+from repro.models.config import ModelConfig, MOE, VLM
+from repro.sharding import (ShardingCtx, constrain, constrain_layer_params,
+                            seq_shard)
+
+
+# ===========================================================================
+# Per-layer init
+# ===========================================================================
+def layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+        "attn": attn.attn_init(k1, cfg),
+        "ffn_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+    }
+    if cfg.family == MOE:
+        p["moe"] = moe.moe_init(k2, cfg)
+    else:
+        p["mlp"] = common.mlp_init(k2, cfg.d_model, cfg.d_ff,
+                                   cfg.jnp_dtype, gated=cfg.gated_mlp)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": common.embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                   cfg.jnp_dtype),
+        "layers": layers,
+        "final_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            kh, cfg.d_model, cfg.padded_vocab, cfg.jnp_dtype)
+    if cfg.family == VLM:
+        params["patch_proj"] = common.dense_init(
+            jax.random.fold_in(kh, 1), cfg.d_model, cfg.d_model,
+            cfg.jnp_dtype)
+    return params
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ===========================================================================
+# Layer application (shared by train / prefill / decode)
+# ===========================================================================
+def _ffn(p, x, cfg: ModelConfig, ctx):
+    h = common.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.family == MOE:
+        out, aux = moe.moe_apply(p["moe"], h, cfg, ctx)
+        return x + out, aux
+    return x + common.mlp_apply(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def layer_prefill(p, x, cfg: ModelConfig, ctx, positions, *, make_cache,
+                  mrope3=None):
+    h = common.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, cache = attn.mla_prefill(p["attn"], h, cfg, ctx, positions,
+                                    make_cache=make_cache)
+    elif mrope3 is not None:
+        a, cache = attn.gqa_mrope_prefill(p["attn"], h, cfg, ctx, mrope3,
+                                          make_cache=make_cache)
+    else:
+        a, cache = attn.gqa_prefill(p["attn"], h, cfg, ctx, positions,
+                                    causal=cfg.causal,
+                                    make_cache=make_cache)
+    x = x + a
+    x, aux = _ffn(p, x, cfg, ctx)
+    return x, cache, aux
+
+
+def layer_decode(p, x, cfg: ModelConfig, ctx, cache, pos, *, mrope3=None):
+    h = common.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, cache = attn.mla_decode(p["attn"], h, cfg, ctx, cache, pos)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], h, cfg, ctx, cache, pos,
+                                   mrope_positions3=mrope3)
+    x = x + a
+    x, _ = _ffn(p, x, cfg, ctx)
+    return x, cache
+
+
+# ===========================================================================
+# VLM helpers
+# ===========================================================================
+def mrope_positions_prefill(cfg: ModelConfig, batch: int, n_patch: int,
+                            s_text: int) -> jax.Array:
+    """(3, B, n_patch + s_text) t/h/w position ids, Qwen2-VL style."""
+    g = max(int(round(n_patch ** 0.5)), 1)
+    pid = jnp.arange(n_patch)
+    t_p = jnp.zeros((n_patch,), jnp.int32)
+    h_p = (pid // g).astype(jnp.int32)
+    w_p = (pid % g).astype(jnp.int32)
+    base = jnp.maximum(g, 1)
+    tid = base + jnp.arange(s_text, dtype=jnp.int32)
+    pos3 = jnp.stack([
+        jnp.concatenate([t_p, tid]),
+        jnp.concatenate([h_p, tid]),
+        jnp.concatenate([w_p, tid]),
+    ])                                                        # (3, S)
+    return jnp.broadcast_to(pos3[:, None], (3, batch, n_patch + s_text))
+
+
+def mrope_positions_decode(cfg: ModelConfig, batch: int, pos) -> jax.Array:
+    """Text-token M-RoPE id for global cache position ``pos``.
+
+    The patch block compresses rope ids: text ids start at ``grid`` (not at
+    ``num_patches``), so decode ids carry a static delta of
+    ``grid - num_patches`` relative to the cache position (vLLM's
+    mrope-delta, static here because the patch count is a config constant).
+    """
+    g = max(int(round(cfg.num_patches ** 0.5)), 1)
+    p = jnp.full((batch, 1), pos - cfg.num_patches + g, jnp.int32)
+    return jnp.stack([p, p, p])                               # (3, B, 1)
+
+
+# ===========================================================================
+# Full-model passes
+# ===========================================================================
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, ctx):
+    """Returns (x (B,S,D), positions or mrope3, text_offset)."""
+    tokens = batch["tokens"]
+    b, s_text = tokens.shape
+    x = params["embed"][tokens]                               # (B,S,D) gather
+    if cfg.family == VLM:
+        patches = batch["patches"].astype(cfg.jnp_dtype)
+        vis = patches @ params["patch_proj"]
+        x = jnp.concatenate([vis, x], axis=1)
+        n_patch = patches.shape[1]
+        mrope3 = mrope_positions_prefill(cfg, b, n_patch, s_text)
+        return x, mrope3, n_patch
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 (b, x.shape[1]))
+    return x, positions, 0
+
+
+def _stack_scan(cfg: ModelConfig, body, x, layers, *extra):
+    """Scan ``body`` over stacked layer params (+ optional stacked extras)."""
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def f(carry, xs):
+        return body(carry, xs)
+
+    return jax.lax.scan(f, x, (layers,) + extra)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig,
+            ctx: Optional[ShardingCtx]) -> Tuple[jax.Array, dict]:
+    x, pos_or3, text_off = _embed_inputs(params, cfg, batch, ctx)
+    x = constrain(ctx, x, ctx.batch_spec if ctx else None)
+    is_vlm = cfg.family == VLM
+
+    def body(h, xs):
+        (p,) = xs
+        p = constrain_layer_params(ctx, p)
+        h, _, aux = layer_prefill(
+            p, h, cfg, ctx,
+            None if is_vlm else pos_or3, make_cache=False,
+            mrope3=pos_or3 if is_vlm else None)
+        return seq_shard(ctx, h), aux
+
+    x, auxs = _stack_scan(cfg, body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if is_vlm:
+        x = x[:, text_off:]
+    head = lm_head_weight(params, cfg)
+    loss = common.chunked_softmax_xent(x, head, batch["labels"])
+    aux = jnp.sum(auxs)
+    metrics = {"xent": loss, "aux": aux}
+    return loss + 0.01 * aux, metrics
+
+
+def prefill_fn(params, batch: dict, cfg: ModelConfig,
+               ctx: Optional[ShardingCtx]) -> Tuple[jax.Array, dict]:
+    """Returns (last-token logits (B, V), stacked cache)."""
+    x, pos_or3, text_off = _embed_inputs(params, cfg, batch, ctx)
+    is_vlm = cfg.family == VLM
+
+    def body(h, xs):
+        (p,) = xs
+        h, cache, _ = layer_prefill(
+            p, h, cfg, ctx,
+            None if is_vlm else pos_or3, make_cache=True,
+            mrope3=pos_or3 if is_vlm else None)
+        return h, cache
+
+    x, caches = _stack_scan(cfg, body, x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ lm_head_weight(params, cfg)
+    return logits.astype(jnp.float32), caches
+
+
+def decode_fn(params, tokens, cache, pos, cfg: ModelConfig,
+              ctx: Optional[ShardingCtx]) -> Tuple[jax.Array, dict]:
+    """tokens: (B, 1); pos: scalar index of the new token.
+
+    The cache rides in the scan CARRY (slice layer in, write layer back)
+    rather than as xs->ys: while-loop state buffers alias in place, so the
+    multi-TB cache exists ONCE instead of as separate input/output/ys
+    buffers — the difference between fitting and not fitting 16 GiB/chip
+    on the 32k-decode shape.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    mrope3 = (mrope_positions_decode(cfg, b, pos)
+              if cfg.family == VLM else None)
+
+    def body(carry, xs):
+        h, cache_all = carry
+        p, li = xs
+        c = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, li, 0,
+                                                   keepdims=False),
+            cache_all)
+        h, c_new = layer_decode(p, h, cfg, ctx, c, pos, mrope3=mrope3)
+        cache_all = jax.tree.map(
+            lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                a, n.astype(a.dtype), li, 0),
+            cache_all, c_new)
+        return (h, cache_all), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache),
+        (params["layers"], jnp.arange(cfg.num_layers)))
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ lm_head_weight(params, cfg)
+    return logits.astype(jnp.float32), new_cache
+
+
+def empty_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> dict:
+    l = cfg.num_layers
+    if cfg.attention == "mla":
+        one = attn.mla_empty_cache(cfg, batch, seq, dtype)
+    else:
+        one = attn.gqa_empty_cache(cfg, batch, seq, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (l,) + a.shape), one)

@@ -1,0 +1,308 @@
+"""Recurrent-family LMs: xLSTM (mLSTM/sLSTM stack) and Zamba2 hybrid
+(Mamba2 backbone + weight-tied shared attention block).
+
+xLSTM layout (7:1): ``num_layers`` splits into super-blocks of
+(slstm_every - 1) mLSTM layers followed by one sLSTM layer; the stack scans
+over super-blocks (outer) and mLSTM layers (inner).
+
+Zamba2 layout: groups of ``shared_attn_every`` Mamba2 layers, after each of
+which the single *shared* (weight-tied) attention+MLP block runs on
+``concat(hidden, original_embedding)`` (2*D -> attention -> D), per
+arXiv:2411.15242.  Each application site has its own KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, ssm
+from repro.models.config import ModelConfig
+from repro.sharding import ShardingCtx, seq_shard
+
+# ===========================================================================
+# xLSTM
+# ===========================================================================
+
+
+def _xlstm_shape(cfg: ModelConfig) -> Tuple[int, int]:
+    n_sb = cfg.num_layers // cfg.slstm_every
+    m_per = cfg.slstm_every - 1
+    assert n_sb * cfg.slstm_every == cfg.num_layers, (
+        "num_layers must be a multiple of slstm_every")
+    return n_sb, m_per
+
+
+def xlstm_init(key, cfg: ModelConfig) -> dict:
+    n_sb, m_per = _xlstm_shape(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+
+    def m_init(k):
+        return {"norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+                "cell": ssm.mlstm_init(k, cfg, cfg.d_model)}
+
+    def s_init(k):
+        return {"norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+                "cell": ssm.slstm_init(k, cfg, cfg.d_model)}
+
+    mkeys = jax.random.split(km, n_sb * m_per).reshape(n_sb, m_per, 2)
+    skeys = jax.random.split(ks, n_sb)
+    return {
+        "embed": common.embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                   cfg.jnp_dtype),
+        "mlstm": jax.vmap(jax.vmap(m_init))(mkeys),
+        "slstm": jax.vmap(s_init)(skeys),
+        "final_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+        "lm_head": common.dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                                     cfg.jnp_dtype),
+    }
+
+
+def xlstm_empty_state(cfg: ModelConfig, batch: int) -> dict:
+    n_sb, m_per = _xlstm_shape(cfg)
+    m_one = ssm.mlstm_empty_state(cfg, cfg.d_model, batch)
+    s_one = ssm.slstm_empty_state(cfg, cfg.d_model, batch)
+    return {
+        "mlstm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None],
+                                       (n_sb, m_per) + a.shape), m_one),
+        "slstm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), s_one),
+    }
+
+
+def _xlstm_pass(params, x, cfg: ModelConfig, state: Optional[dict],
+                decode: bool, ctx=None):
+    """Shared stack traversal.  state=None -> fresh prefill state."""
+    b = x.shape[0]
+    if state is None:
+        state = xlstm_empty_state(cfg, b)
+    m_fn = ssm.mlstm_decode if decode else ssm.mlstm_prefill
+    s_fn = ssm.slstm_decode if decode else ssm.slstm_prefill
+
+    def inner(h, xs):
+        p, st = xs
+        y, st_new = m_fn(p["cell"],
+                         common.rms_norm(h, p["norm"], cfg.norm_eps),
+                         cfg, st)
+        return h + y, st_new
+
+    if cfg.remat and not decode:
+        # nested remat: the super-block backward replays mLSTM layers one
+        # at a time (matrix-memory chunk states are ~4 GB/layer otherwise)
+        inner = jax.checkpoint(inner)
+
+    def outer(h, xs):
+        p_m, st_m, p_s, st_s = xs
+        h, st_m_new = jax.lax.scan(inner, h, (p_m, st_m))
+        y, st_s_new = s_fn(p_s["cell"],
+                           common.rms_norm(h, p_s["norm"], cfg.norm_eps),
+                           cfg, st_s)
+        h = h + y
+        if not decode:
+            h = seq_shard(ctx, h)
+        return h, (st_m_new, st_s_new)
+
+    outer_fn = jax.checkpoint(outer) if (cfg.remat and not decode) else outer
+    x, (st_m, st_s) = jax.lax.scan(
+        outer_fn, x,
+        (params["mlstm"], state["mlstm"], params["slstm"], state["slstm"]))
+    return x, {"mlstm": st_m, "slstm": st_s}
+
+
+def xlstm_loss(params, batch, cfg, ctx):
+    x = params["embed"][batch["tokens"]]
+    x, _ = _xlstm_pass(params, x, cfg, None, decode=False, ctx=ctx)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = common.chunked_softmax_xent(x, params["lm_head"], batch["labels"])
+    return loss, {"xent": loss}
+
+
+def xlstm_prefill(params, batch, cfg, ctx):
+    x = params["embed"][batch["tokens"]]
+    x, state = _xlstm_pass(params, x, cfg, None, decode=False, ctx=ctx)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), state
+
+
+def xlstm_decode(params, tokens, cache, pos, cfg, ctx):
+    x = params["embed"][tokens]
+    x, state = _xlstm_pass(params, x, cfg, cache, decode=True, ctx=ctx)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), state
+
+
+# ===========================================================================
+# Zamba2 hybrid
+# ===========================================================================
+def _zamba_groups(cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    n_full = cfg.num_layers // every
+    rem = cfg.num_layers - n_full * every
+    sizes = [every] * n_full + ([rem] if rem else [])
+    return sizes, n_full  # n_full == number of shared-attn sites
+
+
+def zamba_init(key, cfg: ModelConfig) -> dict:
+    sizes, n_sites = _zamba_groups(cfg)
+    ke, km, ka, kp, kh = jax.random.split(key, 5)
+
+    def m_init(k):
+        return {"norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+                "cell": ssm.mamba2_init(k, cfg, cfg.d_model)}
+
+    mkeys = jax.random.split(km, cfg.num_layers)
+    k1, k2 = jax.random.split(ka)
+    shared = {
+        "norm": common.ones((2 * cfg.d_model,), cfg.jnp_dtype),
+        "attn": attn.gqa_init(k1, cfg, d_model=2 * cfg.d_model),
+        "mlp_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+        "mlp": common.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jnp_dtype),
+    }
+    # output projection maps attention back to d_model
+    shared["attn"]["w_o"] = common.dense_init(
+        jax.random.fold_in(ka, 7), cfg.n_heads * cfg.head_dim, cfg.d_model,
+        cfg.jnp_dtype)
+    return {
+        "embed": common.embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                   cfg.jnp_dtype),
+        "mamba": jax.vmap(m_init)(mkeys),
+        "shared": shared,
+        "final_norm": common.ones((cfg.d_model,), cfg.jnp_dtype),
+        "lm_head": common.dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                                     cfg.jnp_dtype),
+    }
+
+
+def zamba_empty_cache(cfg: ModelConfig, batch: int, seq: int,
+                      dtype=None) -> dict:
+    _, n_sites = _zamba_groups(cfg)
+    m_one = ssm.mamba2_empty_state(cfg, cfg.d_model, batch)
+    s = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+    a_one = attn.gqa_empty_cache(cfg, batch, s, dtype)
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.num_layers,) + a.shape), m_one),
+        "attn": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_sites,) + a.shape),
+            a_one),
+    }
+
+
+def _slice_tree(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _shared_attn_prefill(shared, h, x0, cfg, ctx, positions, make_cache):
+    cat = jnp.concatenate([h, x0], axis=-1)
+    cat = common.rms_norm(cat, shared["norm"], cfg.norm_eps)
+    a, cache = attn.gqa_prefill(shared["attn"], cat, cfg, ctx, positions,
+                                make_cache=make_cache)
+    h = h + a
+    f = common.rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+    return h + common.mlp_apply(shared["mlp"], f), cache
+
+
+def _shared_attn_decode(shared, h, x0, cfg, ctx, cache, pos):
+    cat = jnp.concatenate([h, x0], axis=-1)
+    cat = common.rms_norm(cat, shared["norm"], cfg.norm_eps)
+    a, cache = attn.gqa_decode(shared["attn"], cat, cfg, ctx, cache, pos)
+    h = h + a
+    f = common.rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+    return h + common.mlp_apply(shared["mlp"], f), cache
+
+
+def _zamba_pass(params, x, cfg: ModelConfig, ctx, cache: Optional[dict],
+                pos, decode: bool, make_cache: bool):
+    """Traverse groups; returns (x, new_cache | None)."""
+    sizes, n_sites = _zamba_groups(cfg)
+    b, s, _ = x.shape
+    x0 = x if decode else seq_shard(ctx, x)
+    if not decode:
+        positions = jnp.broadcast_to(jnp.arange(pos, pos + s)[None], (b, s))
+    m_fn = ssm.mamba2_decode if decode else ssm.mamba2_prefill
+
+    def group_body(h, xs):
+        p, st = xs
+        y, st_new = m_fn(p["cell"],
+                         common.rms_norm(h, p["norm"], cfg.norm_eps),
+                         cfg, st)
+        h = h + y
+        if not decode:
+            h = seq_shard(ctx, h)
+        return h, st_new
+
+    body = (jax.checkpoint(group_body)
+            if (cfg.remat and not decode) else group_body)
+
+    shared_prefill = _shared_attn_prefill
+    if cfg.remat and not decode and not make_cache:
+        # loss path: remat each shared-attention site (its flash residuals
+        # are full-sequence q/k/v/out tensors otherwise)
+        shared_prefill = jax.checkpoint(_shared_attn_prefill,
+                                        static_argnums=(3, 4, 6))
+
+    new_m_states, new_a_caches = [], []
+    lo = 0
+    if decode:
+        m_states = cache["mamba"]
+    else:
+        m_states = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            ssm.mamba2_empty_state(cfg, cfg.d_model, b))
+    for gi, size in enumerate(sizes):
+        p_g = _slice_tree(params["mamba"], lo, lo + size)
+        st_g = _slice_tree(m_states, lo, lo + size)
+        x, st_new = jax.lax.scan(body, x, (p_g, st_g))
+        new_m_states.append(st_new)
+        if gi < n_sites:
+            if decode:
+                a_cache = jax.tree.map(lambda a: a[gi], cache["attn"])
+                x, a_new = _shared_attn_decode(params["shared"], x, x0, cfg,
+                                               ctx, a_cache, pos)
+            else:
+                x, a_new = shared_prefill(params["shared"], x, x0, cfg,
+                                          ctx, positions, make_cache)
+            new_a_caches.append(a_new)
+        lo += size
+
+    out_cache = None
+    if decode or make_cache:
+        m_all = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                             *new_m_states)
+        a_all = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_a_caches)
+                 if new_a_caches[0] is not None else None)
+        out_cache = {"mamba": m_all, "attn": a_all}
+    return x, out_cache
+
+
+def zamba_loss(params, batch, cfg, ctx):
+    x = params["embed"][batch["tokens"]]
+    x, _ = _zamba_pass(params, x, cfg, ctx, None, 0, decode=False,
+                       make_cache=False)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = common.chunked_softmax_xent(x, params["lm_head"], batch["labels"])
+    return loss, {"xent": loss}
+
+
+def zamba_prefill(params, batch, cfg, ctx):
+    x = params["embed"][batch["tokens"]]
+    x, cache = _zamba_pass(params, x, cfg, ctx, None, 0, decode=False,
+                           make_cache=True)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), cache
+
+
+def zamba_decode(params, tokens, cache, pos, cfg, ctx):
+    x = params["embed"][tokens]
+    x, new_cache = _zamba_pass(params, x, cfg, ctx, cache, pos, decode=True,
+                               make_cache=True)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits.astype(jnp.float32), new_cache

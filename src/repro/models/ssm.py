@@ -1,0 +1,422 @@
+"""Recurrent sequence-mixing blocks: Mamba2 (SSD) and xLSTM (mLSTM/sLSTM).
+
+All three expose the same triple of entry points:
+
+    *_init(key, cfg, d_model)             -> params
+    *_prefill(params, x, cfg)             -> (y, final_state)   # full seq
+    *_decode(params, x_tok, cfg, state)   -> (y_tok, new_state) # 1 token
+
+The prefill paths are chunkwise-parallel (linear time, O(chunk^2) intra-chunk
+work) so the 500k-token long-context shape lowers with O(1) recurrent state.
+The decode paths are exact single-step recurrences; tests assert prefill and
+step-by-step decode agree.
+
+Simplifications vs. the source papers (recorded in DESIGN.md):
+  * mLSTM exponential input gate is clipped at exp(8) in BOTH paths instead
+    of carrying the running-max stabiliser; the n-normaliser bounds outputs,
+    and clipping identically in both paths keeps them mathematically equal.
+  * Mamba2 uses n_groups=1 (B/C shared across heads), as in zamba2-1.2b.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+# ===========================================================================
+# Mamba2 (State Space Duality, chunked)
+# ===========================================================================
+def _mamba_dims(cfg: ModelConfig, d_model: int):
+    d_inner = cfg.ssm_expand * d_model
+    head_p = 64 if d_inner % 64 == 0 else max(d_inner // 4, 1)
+    n_heads = d_inner // head_p
+    return d_inner, n_heads, head_p
+
+
+def mamba2_init(key, cfg: ModelConfig, d_model: int) -> dict:
+    d_inner, nh, hp = _mamba_dims(cfg, d_model)
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n
+    ks = common.split_keys(key, 5)
+    dt = cfg.jnp_dtype
+    return {
+        # order: [x(d_inner), B(n), C(n), z(d_inner), dt(nh)]
+        "w_in": common.dense_init(ks[0], d_model,
+                                  2 * d_inner + 2 * n + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": common.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": common.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh).astype(jnp.float32))),
+        "out_norm": common.ones((d_inner,), dt),
+        "w_out": common.dense_init(ks[2], d_inner, d_model, dt),
+    }
+
+
+def _mamba_split(params, x, cfg: ModelConfig, d_model: int):
+    d_inner, nh, hp = _mamba_dims(cfg, d_model)
+    n = cfg.ssm_state
+    z = x @ params["w_in"]
+    xin = z[..., :d_inner]
+    bc = z[..., d_inner:d_inner + 2 * n]
+    gate = z[..., d_inner + 2 * n:2 * d_inner + 2 * n]
+    dt_raw = z[..., 2 * d_inner + 2 * n:]
+    return xin, bc, gate, dt_raw
+
+
+def _causal_conv(seq, conv_w, conv_b, tail=None):
+    """seq: (B, S, C) depthwise causal conv, kernel K.
+
+    ``tail``: (B, K-1, C) carried conv inputs from a previous segment
+    (zeros for a fresh sequence).
+    """
+    k = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([tail.astype(seq.dtype), seq], axis=1)
+    out = sum(pad[:, i:i + seq.shape[1]] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out + conv_b)
+
+
+def _conv_step(state, new, conv_w, conv_b):
+    """state: (B, K-1, C); new: (B, C) -> (out (B, C), new state)."""
+    window = jnp.concatenate([state, new[:, None]], axis=1)   # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def mamba2_empty_state(cfg: ModelConfig, d_model: int, batch: int) -> dict:
+    d_inner, nh, hp = _mamba_dims(cfg, d_model)
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, nh, n, hp), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cfg.jnp_dtype),
+    }
+
+
+def mamba2_prefill(params, x, cfg: ModelConfig,
+                   state: dict | None = None) -> Tuple[jax.Array, dict]:
+    b, s, d_model = x.shape
+    d_inner, nh, hp = _mamba_dims(cfg, d_model)
+    n = cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xin, bc, gate, dt_raw = _mamba_split(params, x, cfg, d_model)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                            tail=None if state is None else state["conv"])
+    xc = conv_out[..., :d_inner].reshape(b, s, nh, hp)
+    bmat = conv_out[..., d_inner:d_inner + n]
+    cmat = conv_out[..., d_inner + n:]
+
+    a = -jnp.exp(params["a_log"])                              # (H,)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + params["dt_bias"])                 # (B,S,H)
+
+    xcf = xc.astype(jnp.float32).reshape(b, nc, q, nh, hp)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, q, n)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, q, n)
+    dtc = dtv.reshape(b, nc, q, nh)
+
+    if state is None:
+        s0 = jnp.zeros((b, nh, n, hp), jnp.float32)
+    else:
+        s0 = state["ssm"]
+
+    @jax.checkpoint
+    def chunk_step(carry, xs):
+        # checkpointed: the backward replays the intra-chunk math instead of
+        # keeping every chunk's decay/score tensors alive (the saved
+        # residual is just the carried state)
+        st = carry                                             # (B,H,N,P)
+        xck, bk, ck, dtk = xs                                  # per-chunk
+        da = dtk * a                                           # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        # intra-chunk (masked attention-like)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])     # (B,Q,P?,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        cb = jnp.einsum("bqn,bpn->bqp", ck, bk)
+        m = cb[..., None] * decay * dtk[:, None]               # (B,Q,Qp,H)
+        m = jnp.where(mask[None, :, :, None], m, 0.0)
+        y_intra = jnp.einsum("bqph,bphd->bqhd", m, xck)
+        # inter-chunk (carry-in state)
+        y_inter = jnp.einsum("bqn,bqh,bhnd->bqhd", ck, jnp.exp(cum), st)
+        # state passing
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,H)
+        st_new = (jnp.exp(cum[:, -1])[..., None, None] * st
+                  + jnp.einsum("bqh,bqn,bqhd->bhnd",
+                               decay_out * dtk, bk, xck))
+        return st_new, y_intra + y_inter
+
+    xs = (xcf.swapaxes(0, 1), bf.swapaxes(0, 1), cf.swapaxes(0, 1),
+          dtc.swapaxes(0, 1))
+    s_final, ych = jax.lax.scan(chunk_step, s0, xs)
+    y = ych.swapaxes(0, 1).reshape(b, s, nh, hp)
+    y = y + params["d_skip"][None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(gate)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+
+    # conv state = last K-1 raw conv inputs (including any carried tail so
+    # segment-wise prefill composes exactly)
+    k = cfg.ssm_conv
+    prev = (state["conv"].astype(conv_in.dtype) if state is not None
+            else jnp.zeros((b, k - 1, conv_in.shape[-1]), conv_in.dtype))
+    full_in = jnp.concatenate([prev, conv_in], axis=1)
+    tail = full_in[:, -(k - 1):]
+    return out, {"ssm": s_final, "conv": tail.astype(cfg.jnp_dtype)}
+
+
+def mamba2_decode(params, x, cfg: ModelConfig,
+                  state: dict) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D)."""
+    b, _, d_model = x.shape
+    d_inner, nh, hp = _mamba_dims(cfg, d_model)
+    n = cfg.ssm_state
+
+    xin, bc, gate, dt_raw = _mamba_split(params, x[:, 0], cfg, d_model)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)              # (B, C)
+    conv_out, conv_state = _conv_step(state["conv"], conv_in,
+                                      params["conv_w"], params["conv_b"])
+    xc = conv_out[..., :d_inner].reshape(b, nh, hp).astype(jnp.float32)
+    bk = conv_out[..., d_inner:d_inner + n].astype(jnp.float32)
+    ck = conv_out[..., d_inner + n:].astype(jnp.float32)
+
+    a = -jnp.exp(params["a_log"])
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    da = jnp.exp(dtv * a)                                      # (B,H)
+    st = (da[..., None, None] * state["ssm"]
+          + jnp.einsum("bh,bn,bhd->bhnd", dtv, bk, xc))
+    y = jnp.einsum("bn,bhnd->bhd", ck, st)
+    y = y + params["d_skip"][None, :, None] * xc
+    y = y.reshape(b, d_inner).astype(x.dtype) * jax.nn.silu(gate)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None]
+    return out, {"ssm": st, "conv": conv_state}
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar, scan)
+# ===========================================================================
+def _mlstm_dims(cfg: ModelConfig, d_model: int):
+    d_inner = 2 * d_model
+    nh = 4
+    dv = d_inner // nh
+    dk = dv // 2
+    return d_inner, nh, dk, dv
+
+
+I_CLIP = 8.0
+
+
+def mlstm_init(key, cfg: ModelConfig, d_model: int) -> dict:
+    d_inner, nh, dk, dv = _mlstm_dims(cfg, d_model)
+    ks = common.split_keys(key, 6)
+    dt = cfg.jnp_dtype
+    return {
+        "w_up": common.dense_init(ks[0], d_model, 2 * d_inner, dt),
+        "w_q": common.dense_init(ks[1], d_inner, nh * dk, dt),
+        "w_k": common.dense_init(ks[2], d_inner, nh * dk, dt),
+        "w_v": common.dense_init(ks[3], d_inner, nh * dv, dt),
+        "w_if": common.dense_init(ks[4], d_inner, 2 * nh, dt),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((nh,), jnp.float32),
+             jnp.linspace(3.0, 6.0, nh).astype(jnp.float32)]),
+        "out_norm": common.ones((d_inner,), dt),
+        "w_down": common.dense_init(ks[5], d_inner, d_model, dt),
+    }
+
+
+def mlstm_empty_state(cfg: ModelConfig, d_model: int, batch: int) -> dict:
+    _, nh, dk, dv = _mlstm_dims(cfg, d_model)
+    return {"c": jnp.zeros((batch, nh, dk, dv), jnp.float32),
+            "n": jnp.zeros((batch, nh, dk), jnp.float32)}
+
+
+def _mlstm_gates(params, xi, nh):
+    raw = (xi @ params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    i_raw, f_raw = raw[..., :nh], raw[..., nh:]
+    i = jnp.exp(jnp.minimum(i_raw, I_CLIP))
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return i, log_f
+
+
+def mlstm_prefill(params, x, cfg: ModelConfig,
+                  state: dict | None = None) -> Tuple[jax.Array, dict]:
+    b, s, d_model = x.shape
+    d_inner, nh, dk, dv = _mlstm_dims(cfg, d_model)
+    q_len = min(cfg.ssm_chunk, s)
+    while s % q_len:
+        q_len //= 2
+    nc = s // q_len
+
+    up = x @ params["w_up"]
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    scale = 1.0 / math.sqrt(dk)
+    qm = (xi @ params["w_q"]).reshape(b, s, nh, dk).astype(jnp.float32) * scale
+    km = (xi @ params["w_k"]).reshape(b, s, nh, dk).astype(jnp.float32)
+    vm = (xi @ params["w_v"]).reshape(b, s, nh, dv).astype(jnp.float32)
+    i_gate, log_f = _mlstm_gates(params, xi, nh)               # (B,S,H)
+
+    qc = qm.reshape(b, nc, q_len, nh, dk)
+    kc = km.reshape(b, nc, q_len, nh, dk)
+    vc = vm.reshape(b, nc, q_len, nh, dv)
+    ic = i_gate.reshape(b, nc, q_len, nh)
+    fc = log_f.reshape(b, nc, q_len, nh)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, nh, dk), jnp.float32)
+    else:
+        c0, n0 = state["c"], state["n"]
+
+    @jax.checkpoint
+    def chunk_step(carry, xs):
+        c_st, n_st = carry
+        qk, kk, vk, ik, fk = xs
+        cum = jnp.cumsum(fk, axis=1)                           # (B,Q,H)
+        # intra-chunk decay: prod of f in (p, q]  = exp(cum_q - cum_p)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])     # (B,Q,P,H)
+        mask = jnp.tril(jnp.ones((q_len, q_len), bool))
+        scores = jnp.einsum("bqhd,bphd->bqph", qk, kk)
+        m = scores * decay * ik[:, None]
+        m = jnp.where(mask[None, :, :, None], m, 0.0)
+        y_intra = jnp.einsum("bqph,bphd->bqhd", m, vk)
+        y_inter = jnp.einsum("bqhd,bqh,bhdv->bqhv", qk, jnp.exp(cum), c_st)
+        # normaliser: n_t.q_t = sum_p decay*i*(k_p.q_t) + exp(cum)*n_carry.q
+        # the intra part is exactly the row-sum of m.
+        nq_intra = m.sum(axis=2)                               # (B,Q,H)
+        nq_inter = jnp.einsum("bqhd,bqh,bhd->bqh", qk, jnp.exp(cum), n_st)
+        denom = jnp.maximum(jnp.abs(nq_intra + nq_inter), 1.0)
+        y = (y_intra + y_inter) / denom[..., None]
+        # state update
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,H)
+        c_new = (jnp.exp(cum[:, -1])[..., None, None] * c_st
+                 + jnp.einsum("bqh,bqhd,bqhv->bhdv",
+                              decay_out * ik, kk, vk))
+        n_new = (jnp.exp(cum[:, -1])[..., None] * n_st
+                 + jnp.einsum("bqh,bqhd->bhd", decay_out * ik, kk))
+        return (c_new, n_new), y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (qc, kc, vc, ic, fc))
+    (c_f, n_f), ych = jax.lax.scan(chunk_step, (c0, n0), xs)
+    y = ych.swapaxes(0, 1).reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(gate)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return y @ params["w_down"], {"c": c_f, "n": n_f}
+
+
+def mlstm_decode(params, x, cfg: ModelConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    b, _, d_model = x.shape
+    d_inner, nh, dk, dv = _mlstm_dims(cfg, d_model)
+    up = x[:, 0] @ params["w_up"]
+    xi, gate = up[..., :d_inner], up[..., d_inner:]
+    scale = 1.0 / math.sqrt(dk)
+    qv = (xi @ params["w_q"]).reshape(b, nh, dk).astype(jnp.float32) * scale
+    kv = (xi @ params["w_k"]).reshape(b, nh, dk).astype(jnp.float32)
+    vv = (xi @ params["w_v"]).reshape(b, nh, dv).astype(jnp.float32)
+    i_gate, log_f = _mlstm_gates(params, xi, nh)               # (B,H)
+    f = jnp.exp(log_f)
+    c_new = (f[..., None, None] * state["c"]
+             + i_gate[..., None, None] * kv[..., :, None] * vv[..., None, :])
+    n_new = f[..., None] * state["n"] + i_gate[..., None] * kv
+    num = jnp.einsum("bhd,bhdv->bhv", qv, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qv, n_new)), 1.0)
+    y = (num / den[..., None]).reshape(b, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(gate)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return (y @ params["w_down"])[:, None], {"c": c_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar-memory recurrent cell with exponential gating + stabiliser
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig, d_model: int) -> dict:
+    nh = 4
+    dh = d_model // nh
+    ks = common.split_keys(key, 3)
+    dt = cfg.jnp_dtype
+    return {
+        # gates z,i,f,o each (D, D) input + per-head recurrent R (H, dh, dh)
+        "w_zifo": common.dense_init(ks[0], d_model, 4 * d_model, dt),
+        "r_zifo": (jax.random.normal(ks[1], (4, nh, dh, dh), jnp.float32)
+                   / math.sqrt(dh)).astype(dt),
+        "b_zifo": common.zeros((4 * d_model,), jnp.float32),
+        "out_norm": common.ones((d_model,), dt),
+        "w_out": common.dense_init(ks[2], d_model, d_model, dt),
+    }
+
+
+def slstm_empty_state(cfg: ModelConfig, d_model: int, batch: int) -> dict:
+    return {"c": jnp.zeros((batch, d_model), jnp.float32),
+            "n": jnp.zeros((batch, d_model), jnp.float32),
+            "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d_model), jnp.float32)}
+
+
+def _slstm_cell(params, xt, st, nh, dh):
+    """One sLSTM step.  xt: (B, 4*D) pre-projected input contribution."""
+    b = xt.shape[0]
+    h_prev = st["h"]
+    hh = h_prev.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh.astype(params["r_zifo"].dtype),
+                     params["r_zifo"]).reshape(4, b, nh * dh)
+    zifo = (xt.reshape(b, 4, -1).swapaxes(0, 1).astype(jnp.float32)
+            + rec.astype(jnp.float32)
+            + params["b_zifo"].reshape(4, -1)[:, None].swapaxes(0, 1)
+            .reshape(4, 1, -1))
+    z = jnp.tanh(zifo[0])
+    log_i = zifo[1]
+    log_f = jax.nn.log_sigmoid(zifo[2])
+    o = jax.nn.sigmoid(zifo[3])
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_s * st["c"] + i_s * z
+    n_new = f_s * st["n"] + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_prefill(params, x, cfg: ModelConfig,
+                  state: dict | None = None) -> Tuple[jax.Array, dict]:
+    b, s, d_model = x.shape
+    nh, dh = 4, d_model // 4
+    if state is None:
+        state = slstm_empty_state(cfg, d_model, b)
+    xz = x @ params["w_zifo"]                                  # (B,S,4D)
+
+    def step(st, xt):
+        st2 = _slstm_cell(params, xt, st, nh, dh)
+        return st2, st2["h"]
+
+    st_f, hs = jax.lax.scan(step, state, xz.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                      # (B,S,D)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return y @ params["w_out"], st_f
+
+
+def slstm_decode(params, x, cfg: ModelConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    b, _, d_model = x.shape
+    nh, dh = 4, d_model // 4
+    xz = x[:, 0] @ params["w_zifo"]
+    st = _slstm_cell(params, xz, state, nh, dh)
+    y = st["h"][:, None].astype(x.dtype)
+    y = common.rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return y @ params["w_out"], st

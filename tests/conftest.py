@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests see the normal single-CPU device world; only dryrun.py (and the
+# subprocess helpers under tests/helpers) force a multi-device platform.
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,80 @@
+"""Prefill(S+T) last-logits == prefill(S) + T decode steps, per family.
+
+This is the invariant that catches cache-layout, rope-offset and recurrence
+bugs.  MoE uses a large capacity factor (capacity dropping legitimately
+breaks prefill/decode equality; see test_moe.py for dropping semantics).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic import make_batch
+from repro.models.api import build_model
+from repro.models.config import (DENSE, ENCDEC, MAMBA_HYBRID, MOE, VLM,
+                                 XLSTM, ModelConfig)
+
+CASES = [
+    ModelConfig("dense-gqa", DENSE, 4, 128, 4, 2, 256, 997,
+                head_dim=32, vocab_pad_to=8, dtype="float32", remat=False),
+    ModelConfig("dense-mla", DENSE, 4, 128, 4, 4, 256, 997, attention="mla",
+                q_lora_rank=64, kv_lora_rank=32, rope_head_dim=16,
+                v_head_dim=32, vocab_pad_to=8, dtype="float32", remat=False),
+    ModelConfig("dense-win", DENSE, 4, 128, 4, 2, 256, 997, head_dim=32,
+                sliding_window=16, qkv_bias=True, vocab_pad_to=8,
+                dtype="float32", remat=False),
+    ModelConfig("moe", MOE, 4, 128, 4, 2, 0, 997, head_dim=32, n_experts=4,
+                top_k=2, expert_d_ff=64, capacity_factor=32.0,
+                vocab_pad_to=8, dtype="float32", remat=False),
+    ModelConfig("xlstm", XLSTM, 4, 128, 4, 4, 0, 997, slstm_every=2,
+                ssm_chunk=8, vocab_pad_to=8, dtype="float32", remat=False),
+    ModelConfig("zamba", MAMBA_HYBRID, 4, 128, 4, 4, 256, 997, head_dim=32,
+                shared_attn_every=2, ssm_state=16, ssm_chunk=8,
+                vocab_pad_to=8, dtype="float32", remat=False),
+    ModelConfig("encdec", ENCDEC, 2, 128, 4, 4, 256, 997, enc_layers=2,
+                enc_seq_len=16, head_dim=32, vocab_pad_to=8,
+                dtype="float32", remat=False),
+    ModelConfig("vlm", VLM, 4, 128, 4, 2, 256, 997, head_dim=32,
+                num_patches=16, mrope_sections=(4, 6, 6), vocab_pad_to=8,
+                dtype="float32", remat=False),
+]
+
+B, S, T = 2, 24, 4
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+def test_prefill_decode_equivalence(cfg):
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    full = make_batch(cfg, B, S + T, seed=3)
+    full.pop("labels")
+    ref_logits, _ = jax.jit(api.prefill)(params, full)
+
+    short = dict(full)
+    n_cut = T
+    short["tokens"] = full["tokens"][:, :-n_cut]
+    logits, cache = jax.jit(api.prefill)(params, short)
+
+    if cfg.family == XLSTM:
+        dcache = cache
+    elif cfg.family == MAMBA_HYBRID:
+        dcache = api.empty_cache(B, S + T)
+        dcache["mamba"] = cache["mamba"]
+        dcache["attn"] = jax.tree.map(
+            lambda e, f: e.at[:, :, :f.shape[2]].set(f.astype(e.dtype)),
+            dcache["attn"], cache["attn"])
+    else:
+        dcache = api.empty_cache(B, S + T)
+        dcache = jax.tree.map(
+            lambda e, f: e.at[:, :, :f.shape[2]].set(f.astype(e.dtype)),
+            dcache, cache)
+
+    decode = jax.jit(api.decode)
+    for t in range(T):
+        pos = S + t
+        tok = full["tokens"][:, -(T - t)][:, None]
+        logits, dcache = decode(params, tok, dcache, pos)
+
+    ref, got = np.asarray(ref_logits), np.asarray(logits)
+    scale = np.max(np.abs(ref)) + 1e-9
+    assert np.max(np.abs(got - ref)) / scale < 2e-3, cfg.name

@@ -1,0 +1,63 @@
+"""Unit tests for the HLO cost analyzer (trip counts, collectives, bytes)."""
+import textwrap
+
+import pytest
+
+from repro.analysis.hlo import analyze_hlo, parse_blocks
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[8,16]{1,0} all-gather(%dot.1), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ag)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i.1 = s32[] get-tuple-element(%p.1), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+    }
+
+    ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+      %arg = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg)
+      %wh = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_trip_count_multiplication():
+    res = analyze_hlo(HLO, total_devices=8)
+    # dot: 2 * 8*16 result * 16 contraction = 4096 flops, x5 trips
+    assert res["dot_flops"] == 5 * 2 * 8 * 16 * 16
+    ag = res["collectives"]["all-gather"]
+    assert ag["count"] == 5
+    # payload 8*16*4 = 512 bytes; group size 4 -> wire = 3/4 * 512
+    assert ag["payload_bytes"] == 5 * 512
+    assert abs(ag["wire_bytes"] - 5 * 0.75 * 512) < 1e-6
+
+
+def test_parse_blocks_structure():
+    blocks = parse_blocks(HLO)
+    assert "__entry__" in blocks
+    assert any(op.kind == "while" for op in blocks["__entry__"].ops)
+    body = blocks["body"]
+    assert any(op.kind == "dot" for op in body.ops)
+
+
+def test_tuple_shapes_with_comments():
+    txt = HLO.replace("(s32[], f32[8,16]{1,0})",
+                      "(s32[], /*index=1*/f32[8,16]{1,0})")
+    res = analyze_hlo(txt, total_devices=8)
+    assert res["dot_flops"] == 5 * 2 * 8 * 16 * 16

@@ -1,0 +1,98 @@
+"""MoE dispatch semantics: capacity math, token dropping, determinism,
+load-balance statistics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe
+from repro.models.config import MOE, ModelConfig
+
+CFG = ModelConfig("moe", MOE, 2, 64, 4, 4, 0, 100, n_experts=4, top_k=2,
+                  expert_d_ff=32, dtype="float32", remat=False)
+
+
+def _setup(cfg, t=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = moe.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, t // 2,
+                                                       cfg.d_model))
+    return params, x
+
+
+def test_capacity_rounding():
+    assert moe.capacity(CFG, 64) % 8 == 0
+    assert moe.capacity(CFG, 64) >= 64 * CFG.top_k / CFG.n_experts
+
+
+def test_no_drop_at_high_capacity_matches_dense():
+    """With capacity >= T*K every pair is kept: output equals the dense
+    per-token mixture of its top-k experts."""
+    cfg = CFG.with_(capacity_factor=64.0)
+    params, x = _setup(cfg)
+    out, aux = jax.jit(lambda p, xx: moe.moe_apply(p, xx, cfg, None))(
+        params, x)
+
+    # dense reference: every expert on every token, weighted combine
+    t = x.reshape(-1, cfg.d_model)
+    logits = t @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / top_w.sum(-1, keepdims=True)
+    gate = jax.nn.silu(jnp.einsum("td,edf->tef", t, params["w_gate"]))
+    up = jnp.einsum("td,edf->tef", t, params["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", gate * up, params["w_down"])
+    ref = jnp.zeros_like(t)
+    for kk in range(cfg.top_k):
+        sel = jnp.take_along_axis(all_out, top_ids[:, kk][:, None, None],
+                                  axis=1)[:, 0]
+        ref = ref + sel * top_w[:, kk][:, None]
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_dropping_reduces_output_norm():
+    """Tiny capacity drops pairs; dropped tokens contribute zero."""
+    params, x = _setup(CFG.with_(capacity_factor=64.0))
+    out_full, _ = jax.jit(lambda p, xx: moe.moe_apply(
+        p, xx, CFG.with_(capacity_factor=64.0), None))(params, x)
+    cfg_tight = CFG.with_(capacity_factor=0.25)
+    out_tight, _ = jax.jit(lambda p, xx: moe.moe_apply(
+        p, xx, cfg_tight, None))(params, x)
+    n_full = float(jnp.linalg.norm(out_full))
+    n_tight = float(jnp.linalg.norm(out_tight))
+    assert n_tight < n_full
+
+
+def test_deterministic():
+    params, x = _setup(CFG)
+    f = jax.jit(lambda p, xx: moe.moe_apply(p, xx, CFG, None)[0])
+    np.testing.assert_array_equal(np.asarray(f(params, x)),
+                                  np.asarray(f(params, x)))
+
+
+def test_aux_loss_bounds():
+    """Switch load-balance loss is >= 1 (it equals E * sum f*p and is
+    minimised at uniform routing), modulo the small z-loss term."""
+    params, x = _setup(CFG.with_(capacity_factor=8.0))
+    _, aux = jax.jit(lambda p, xx: moe.moe_apply(
+        p, xx, CFG.with_(capacity_factor=8.0), None))(params, x)
+    assert float(aux) >= 0.9
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(2, 16), e=st.sampled_from([2, 4, 8]),
+       k=st.integers(1, 2), seed=st.integers(0, 2**30))
+def test_dispatch_indices_properties(t, e, k, seed):
+    """Slots are unique (no collisions), in range, and respect capacity."""
+    k = min(k, e)
+    cap = 8
+    ids = jax.random.randint(jax.random.PRNGKey(seed), (t, k), 0, e)
+    slots = np.asarray(moe._dispatch_indices(ids, k, e, cap, 0, e))
+    kept = slots[slots < e * cap]
+    assert len(np.unique(kept)) == len(kept)          # unique slots
+    per_expert = {}
+    for s in kept:
+        per_expert[s // cap] = per_expert.get(s // cap, 0) + 1
+    assert all(v <= cap for v in per_expert.values())  # capacity respected

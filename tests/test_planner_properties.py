@@ -1,0 +1,82 @@
+"""Property tests on the Pipeline Planner's analytic model + simulator."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planner import (analytic_latency, analytic_peak, plan,
+                                simulate)
+
+
+def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes):
+    return {
+        "num_layers": n,
+        "layer_t_load": t_load,
+        "layer_t_comp": t_comp,
+        "layer_bytes": layer_bytes,
+        "other_bytes": other_bytes,
+        "shards": (
+            [{"name": "embed", "kind": "embed", "bytes": other_bytes,
+              "t_load": 0.0, "t_comp": 0.0}]
+            + [{"name": f"layer_{i:03d}", "kind": "layer",
+                "bytes": layer_bytes, "t_load": t_load, "t_comp": t_comp}
+               for i in range(n)]),
+    }
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 48), tl=st.floats(0.001, 0.2),
+       tc=st.floats(0.0005, 0.05), m=st.integers(1, 8))
+def test_simulated_latency_bounds(n, tl, tc, m):
+    prof = synth_profile(n, tl, tc, 10, 5)
+    lat, peak = simulate(prof, m)
+    # lower bound: all compute is serial; one load must precede it
+    assert lat >= n * tc - 1e-9
+    assert lat >= tl + tc - 1e-9
+    # upper bound: fully serial load+compute
+    assert lat <= n * (tl + tc) + 1e-6
+    # peak: at least 1 layer + other; at most whole model
+    assert 5 + 10 <= peak <= 5 + 10 * n
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 32), tl=st.floats(0.01, 0.2),
+       tc=st.floats(0.0005, 0.02))
+def test_more_agents_not_slower_unbudgeted(n, tl, tc):
+    """With load-bound layers (paper Obs. II), adding agents must not hurt
+    latency (and must not shrink peak memory)."""
+    prof = synth_profile(n, tl, tc, 10, 5)
+    lat_prev, peak_prev = simulate(prof, 1)
+    for m in (2, 4):
+        lat, peak = simulate(prof, m)
+        assert lat <= lat_prev + 1e-9
+        assert peak >= peak_prev - 1e-9
+        lat_prev, peak_prev = lat, peak
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 24), m=st.integers(1, 6),
+       budget_layers=st.integers(1, 8))
+def test_budget_respected(n, m, budget_layers):
+    prof = synth_profile(n, 0.05, 0.005, 10, 5)
+    budget = 5 + 10 * budget_layers
+    lat, peak = simulate(prof, m, budget)
+    if math.isfinite(lat):
+        assert peak <= budget
+
+
+def test_plan_monotone_in_budget():
+    prof = synth_profile(24, 0.05, 0.004, 10, 5)
+    budgets = [5 + 10 * b for b in (2, 4, 8)] + [None]
+    entries = plan(prof, budgets)
+    lats = [e.predicted_latency_s for e in entries]
+    assert all(lats[i] >= lats[i + 1] - 1e-9 for i in range(len(lats) - 1))
+    assert all(e.feasible for e in entries)
+
+
+def test_analytic_model_trends():
+    # latency falls with m; peak grows with m
+    lats = [analytic_latency(24, m, 0.05, 0.004) for m in (1, 2, 4, 8)]
+    assert all(lats[i] >= lats[i + 1] for i in range(3))
+    peaks = [analytic_peak(m, 10, 5) for m in (1, 2, 4, 8)]
+    assert all(peaks[i] < peaks[i + 1] for i in range(3))

@@ -1,0 +1,48 @@
+"""Multi-device sharding checks, run in subprocesses (jax pins the device
+count at first init, so forcing 8 host devices needs a fresh process)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(script, env_extra, timeout=900):
+    env = dict(os.environ)
+    env.update(env_extra)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_sharded_equivalence_8dev():
+    r = _run(ROOT / "tests" / "helpers" / "sharded_check.py",
+             {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SHARDED-CHECK-OK" in r.stdout
+
+
+@pytest.mark.parametrize("combo", [
+    ("yi-9b", "decode_32k", "pod"),
+    ("qwen3-moe-30b-a3b", "train_4k", "multipod"),
+    ("xlstm-1.3b", "long_500k", "pod"),
+    ("minicpm3-4b", "prefill_32k", "multipod"),
+])
+def test_dryrun_combo_16dev(combo, tmp_path):
+    """Dry-run lower+compile on a scaled-down 16-device mesh (the full
+    512-device x 78-combo sweep runs via launch/dryrun.py; its committed
+    results live in experiments/dryrun)."""
+    arch, shape, mesh = combo
+    env = {"REPRO_DRYRUN_DEVICES": "16"}
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)]
+    penv = dict(os.environ)
+    penv.update(env)
+    penv["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(cmd, env=penv, capture_output=True, text=True,
+                       timeout=1200)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "all dry-runs OK" in r.stdout

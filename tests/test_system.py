@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests for the Hermes/PIPELOAD system."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import Hermes, PipeloadEngine
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="module")
+def gpt2s(tmp_path_factory):
+    """Small-but-real GPT-2-geometry checkpoint on disk."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=8, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=1024, vocab_size=1000, vocab_pad_to=8, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s"
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    partition_and_save(params, cfg, path)
+    return cfg, path
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return np.random.default_rng(0).integers(0, 1000, (1, 32))
+
+
+def test_partition_manifest(gpt2s):
+    cfg, path = gpt2s
+    man = load_manifest(path)
+    kinds = [s["kind"] for s in man["shards"]]
+    assert kinds.count("layer") == cfg.num_layers
+    assert kinds.count("embed") == 1 and kinds.count("head") == 1
+    # Observation I: encoder/decoder layers dominate the bytes for LLM-like
+    # vocab/layer ratios; with this tiny vocab just check accounting adds up
+    assert man["total_bytes"] == sum(s["bytes"] for s in man["shards"])
+
+
+def test_all_modes_same_logits(gpt2s, toks):
+    cfg, path = gpt2s
+    ref_logits = None
+    for mode, agents in [("baseline", 1), ("pipeswitch", 1),
+                         ("pipeload", 1), ("pipeload", 3)]:
+        eng = PipeloadEngine(path, cfg, mode=mode, num_agents=agents)
+        eng.warmup(1, toks.shape[1])
+        lg, stats = eng.run_single(toks)
+        assert stats.latency_s > 0
+        if ref_logits is None:
+            ref_logits = lg
+        else:
+            np.testing.assert_allclose(np.asarray(lg),
+                                       np.asarray(ref_logits), atol=1e-4)
+
+
+def test_pipeload_reduces_peak_memory(gpt2s, toks):
+    cfg, path = gpt2s
+    peaks = {}
+    for mode, agents in [("baseline", 1), ("pipeload", 2)]:
+        eng = PipeloadEngine(path, cfg, mode=mode, num_agents=agents)
+        eng.warmup(1, toks.shape[1])
+        _, stats = eng.run_single(toks)
+        peaks[mode] = stats.peak_bytes
+    # the paper's core claim: destruction keeps the peak well below baseline
+    assert peaks["pipeload"] < peaks["baseline"]
+
+
+def test_budget_respected_and_correct(gpt2s, toks):
+    cfg, path = gpt2s
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    budget = other + 3 * layer_b
+    eng_b = PipeloadEngine(path, cfg, mode="baseline").warmup(1, 32)
+    ref, _ = eng_b.run_single(toks)
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget).warmup(1, 32)
+    lg, stats = eng.run_single(toks)
+    assert stats.peak_bytes <= budget
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref), atol=1e-4)
+
+
+def test_generate_matches_baseline(gpt2s, toks):
+    cfg, path = gpt2s
+    eng_b = PipeloadEngine(path, cfg, mode="baseline").warmup(1, 32)
+    out_b, _ = eng_b.run_generate(toks, 3)
+    eng_p = PipeloadEngine(path, cfg, mode="pipeload",
+                           num_agents=2).warmup(1, 32)
+    out_p, stats = eng_p.run_generate(toks, 3)
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_p))
+    # pipeload reloads per token (paper §V-B2): 8 layers x 3 tokens
+    assert stats.loads >= 3 * cfg.num_layers
+
+
+def test_pinned_window_reduces_reloads(gpt2s, toks):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         pin_window=4).warmup(1, 32)
+    out_pin, st_pin = eng.run_generate(toks, 3)
+    eng2 = PipeloadEngine(path, cfg, mode="pipeload",
+                          num_agents=2).warmup(1, 32)
+    out_ref, st_ref = eng2.run_generate(toks, 3)
+    np.testing.assert_array_equal(np.asarray(out_pin), np.asarray(out_ref))
+    assert st_pin.loads < st_ref.loads     # beyond-paper: fewer reloads
+
+
+def test_hermes_planner_end_to_end(gpt2s, toks):
+    cfg, path = gpt2s
+    h = Hermes(path, cfg)
+    prof = h.profile(batch=1, seq=32, force=True)
+    assert prof["num_layers"] == cfg.num_layers
+    lb, other = prof["layer_bytes"], prof["other_bytes"]
+    entries = h.plan([other + 3 * lb, other + 8 * lb, None])
+    lats = [e.predicted_latency_s for e in entries]
+    agents = [e.num_agents for e in entries]
+    # Fig. 7 trends: bigger budget -> no fewer agents, no more latency
+    assert agents[0] <= agents[1] <= agents[2] or lats[0] >= lats[2]
+    assert lats[0] >= lats[2] - 1e-9
+    assert all(e.feasible for e in entries)
