@@ -18,6 +18,7 @@ BENCHES = {
     "table2": "benchmarks.bench_table2_latency",
     "table3": "benchmarks.bench_table3_memory",
     "fig7": "benchmarks.bench_fig7_constraints",
+    "decode": "benchmarks.bench_decode",
     "roofline": "benchmarks.bench_roofline",
     "kernels": "benchmarks.bench_kernels",
 }

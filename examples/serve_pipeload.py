@@ -3,7 +3,9 @@
     PYTHONPATH=src python examples/serve_pipeload.py --budget-mb 400
 
 Shows the full Hermes flow: partition -> profile -> plan -> execute, and
-compares baseline / pipeswitch / pipeload latency+memory on this machine.
+compares baseline / pipeswitch / pipeload / pipeload+kv latency+memory on
+this machine (pipeload+kv is the beyond-paper KV-cache decode path; its
+(num_agents, pin_window) come from the generation-aware planner).
 """
 import argparse
 import sys
@@ -50,8 +52,19 @@ def main():
         eng = PipeloadEngine(ckpt, cfg, mode=mode, num_agents=agents,
                              budget_bytes=bud).warmup(1, 4)
         out, st = eng.run_generate(toks, args.new_tokens)
-        print(f"{mode:10s} m={agents}: {st.latency_s:6.2f}s  "
+        print(f"{mode:11s} m={agents}: {st.latency_s:6.2f}s  "
               f"peak={st.peak_bytes/2**20:7.1f}MB  loads={st.loads}")
+
+    g = h.plan_generate([budget], batch=1, prompt_len=toks.shape[1],
+                        new_tokens=args.new_tokens)[0]
+    eng = PipeloadEngine(ckpt, cfg, mode="pipeload",
+                         num_agents=g.num_agents, pin_window=g.pin_window,
+                         budget_bytes=budget if g.feasible else None)
+    eng.warmup(1, 4, decode=True, total_len=toks.shape[1] + args.new_tokens)
+    out, st = eng.run_generate(toks, args.new_tokens, kv_cache=True)
+    print(f"pipeload+kv m={g.num_agents} pin={g.pin_window}: "
+          f"{st.latency_s:6.2f}s  peak={st.peak_bytes/2**20:7.1f}MB  "
+          f"loads={st.loads}  cache={st.cache_bytes/2**20:.1f}MB")
 
 
 if __name__ == "__main__":

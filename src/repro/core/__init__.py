@@ -5,6 +5,7 @@ profiler, pipeline planner and the Hermes facade tying them together.
 """
 from repro.core.engine import MODES, PipeloadEngine, RunStats  # noqa: F401
 from repro.core.hermes import Hermes  # noqa: F401
-from repro.core.planner import (PlanEntry, analytic_latency, plan,  # noqa: F401
+from repro.core.planner import (GenPlanEntry, PlanEntry,  # noqa: F401
+                                analytic_latency, plan, plan_generate,
                                 simulate)
 from repro.core.profiler import profile_model  # noqa: F401

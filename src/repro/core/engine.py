@@ -23,6 +23,16 @@ Engine modes:
 the first ``pin_window`` layers stay resident across GPT token iterations,
 skipping their reload in later pipeline rounds while still honouring the
 budget (the Pipeline Planner picks the window from the schedule).
+
+Generation runs in one of two regimes:
+
+  * ``run_generate(..., kv_cache=False)`` — the paper's engine: the full
+    load+prefix pipeline re-runs for EVERY generated token (§V-B2).
+  * ``run_generate(..., kv_cache=True)`` — beyond-paper incremental decode:
+    ONE pipelined prefill captures a per-layer KV cache (charged to the
+    ledger, so weights + cache share the budget), then each token is a
+    single-token decode pass that still streams non-pinned layer weights
+    through the Loading Agents but touches only O(1) new activations.
 """
 from __future__ import annotations
 
@@ -30,7 +40,7 @@ import dataclasses
 import threading
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +61,20 @@ class RunStats:
     peak_bytes: int
     events: List[Tuple[float, str, str]]
     loads: int = 0
+    # generation extras (0 for single-pass runs)
+    new_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    cache_bytes: int = 0
+    kv_cache: bool = False
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
+
+    @property
+    def per_token_s(self) -> float:
+        """Mean latency per generated token (whole run / tokens)."""
+        return self.latency_s / self.new_tokens if self.new_tokens else 0.0
 
 
 class _Ledger:
@@ -85,7 +106,8 @@ class _Ledger:
 class PipeloadEngine:
     def __init__(self, ckpt_dir, cfg: ModelConfig, *,
                  mode: str = "pipeload", num_agents: int = 4,
-                 budget_bytes: Optional[int] = None, pin_window: int = 0):
+                 budget_bytes: Optional[int] = None, pin_window: int = 0,
+                 attn_impl: Optional[str] = "auto"):
         assert mode in MODES, mode
         self.dir = Path(ckpt_dir)
         self.cfg = cfg
@@ -94,7 +116,7 @@ class PipeloadEngine:
         self.budget = budget_bytes
         self.pin = pin_window if mode == "pipeload" else 0
         self.manifest = load_manifest(ckpt_dir)
-        self.fns = build_module_fns(cfg)
+        self.fns = build_module_fns(cfg, attn_impl=attn_impl)
         self.shards = {s["name"]: s for s in self.manifest["shards"]}
         self.layer_names = [s["name"] for s in self.manifest["shards"]
                             if s["kind"] == "layer"]
@@ -102,16 +124,25 @@ class PipeloadEngine:
         self._resident: Dict[str, dict] = {}
 
     # ------------------------------------------------------------------
-    def warmup(self, batch: int, seq: int):
+    def warmup(self, batch: int, seq: int, *, decode: bool = False,
+               total_len: Optional[int] = None):
         """Compile the module fns ahead of the timed run (serving systems
         warm their executables; without this the first layer's jit compile
         stalls the Inference Agent while Loading Agents race ahead and the
-        measured peak degenerates to the whole model)."""
+        measured peak degenerates to the whole model).  ``decode=True``
+        additionally compiles the KV-cache prefill/decode modules for the
+        (batch, seq -> total_len) generation shape."""
         tokens = jnp.zeros((batch, seq), jnp.int32)
         emb = self._resident.get("embed") or self._load("embed")
         head = self._resident.get("head") or self._load("head")
         w0 = self._load(self.layer_names[0])
         x = self.fns["embed"](emb, tokens)
+        if decode:
+            total = total_len or (seq + 1)
+            self.fns["embed"](emb, tokens[:, -1:])   # single-token shape
+            _, cache = self.fns["layer_cache"](w0, x, total)
+            x1, _ = self.fns["layer_decode"](w0, x[:, -1:], cache, seq)
+            self.fns["head"](head, x1).block_until_ready()
         x = self.fns["layer"](w0, x)
         self.fns["head"](head, x).block_until_ready()
         del w0, emb, head
@@ -130,16 +161,57 @@ class PipeloadEngine:
 
     # ------------------------------------------------------------------
     def _run_pipeline(self, x, ledger: _Ledger, events, t0,
-                      destroy: bool) -> jnp.ndarray:
-        """One pipelined pass over the layer stack (PIPELOAD §III-B)."""
+                      destroy: bool,
+                      apply_fn: Optional[Callable] = None) -> jnp.ndarray:
+        """One pipelined pass over the layer stack (PIPELOAD §III-B).
+
+        ``apply_fn(k, weights, x) -> x`` is the Inference Agent's per-layer
+        step; the default is the full-sequence forward.  The KV decode path
+        substitutes a cache-aware closure — the loading/destruction
+        machinery (S_comp / S_dest / S_stop) is identical.
+        """
         names = self.layer_names
         n = len(names)
+        if apply_fn is None:
+            apply_fn = lambda k, w, h: self._apply_layer(w, h)  # noqa: E731
         ready: Dict[int, dict] = {}
         ready_cond = threading.Condition()   # carries S_comp signals
         destroy_q: List[Tuple[int, dict]] = []
         destroy_cond = threading.Condition()  # carries S_dest signals
         done = threading.Event()
         err: List[BaseException] = []
+
+        # Budgeted runs grant ledger bytes in LAYER order: without this, a
+        # loader striped onto layer k+1 can win the race for the last slot
+        # of headroom while layer k's loader parks on S_stop — the in-order
+        # Inference Agent then never computes k, nothing is destroyed, and
+        # the pipeline deadlocks even above the budget floor.  Granting in
+        # order makes the lowest unloaded layer the next byte consumer, so
+        # the floor (other + cache + pinned + one streaming layer) really
+        # does guarantee progress.
+        stream = [k for k in range(n) if names[k] not in self._resident]
+        grant = {"pos": 0}
+        grant_cond = threading.Condition()
+
+        def acquire_in_order(k: int, nbytes: int) -> bool:
+            """Reserve ``nbytes`` for layer ``k``; False = round aborted
+            (nothing left charged)."""
+            if ledger.budget is not None:
+                with grant_cond:
+                    while (not done.is_set() and grant["pos"] < len(stream)
+                           and stream[grant["pos"]] != k):
+                        grant_cond.wait(timeout=0.1)
+                if done.is_set():
+                    return False
+            ledger.acquire(nbytes, done.is_set)  # may block: S_stop
+            if ledger.budget is not None:
+                with grant_cond:
+                    grant["pos"] += 1
+                    grant_cond.notify_all()
+            if done.is_set():
+                ledger.release(nbytes)
+                return False
+            return True
 
         # Pinned layers (beyond-paper resident window) skip the disk load.
         def loader(agent_idx: int):
@@ -152,9 +224,7 @@ class PipeloadEngine:
                             ready_cond.notify_all()  # S_comp(k)
                         continue
                     nbytes = self.shards[name]["bytes"]
-                    ledger.acquire(nbytes, done.is_set)  # may block: S_stop
-                    if done.is_set():
-                        ledger.release(nbytes)
+                    if not acquire_in_order(k, nbytes):
                         return
                     t = time.perf_counter()
                     w = self._load(name)
@@ -206,7 +276,7 @@ class PipeloadEngine:
                         raise err[0]
                     w = ready[k]
                 t = time.perf_counter()
-                x = self._apply_layer(w, x)
+                x = apply_fn(k, w, x)
                 events.append((t - t0, "comp_start", names[k]))
                 events.append((time.perf_counter() - t0, "comp_end",
                                names[k]))
@@ -241,16 +311,18 @@ class PipeloadEngine:
         return x
 
     # ------------------------------------------------------------------
-    def _forward_once(self, tokens, ledger, events, t0) -> jnp.ndarray:
-        """embed -> pipelined layers -> head."""
-        # embed + head are the paper's "other layers": loaded up front,
-        # resident for the whole run.
+    def _ensure_aux(self, ledger: _Ledger, events, t0):
+        """embed + head are the paper's "other layers": loaded up front,
+        resident for the whole run."""
         for aux in ("embed", "head"):
             if aux not in self._resident:
                 ledger.acquire(self.shards[aux]["bytes"], lambda: False)
                 self._resident[aux] = self._load(aux)
                 events.append((time.perf_counter() - t0, "load_end", aux))
 
+    def _forward_once(self, tokens, ledger, events, t0) -> jnp.ndarray:
+        """embed -> pipelined layers -> head."""
+        self._ensure_aux(ledger, events, t0)
         x = self.fns["embed"](self._resident["embed"], tokens)
 
         if self.mode == "baseline":
@@ -282,14 +354,22 @@ class PipeloadEngine:
                                 loads=sum(1 for e in events
                                           if e[1] == "load_end"))
 
-    def run_generate(self, tokens, new_tokens: int
+    def run_generate(self, tokens, new_tokens: int, *,
+                     kv_cache: bool = False
                      ) -> Tuple[jnp.ndarray, RunStats]:
-        """GPT-style generation: the paper's engine re-runs the pipeline
-        (load + prefix re-inference) for EVERY generated token (§V-B2)."""
+        """GPT-style generation.
+
+        ``kv_cache=False`` reproduces the paper's engine: re-run the full
+        load+prefix pipeline for EVERY generated token (§V-B2).
+        ``kv_cache=True`` prefills once, then decodes token-by-token against
+        per-layer KV caches (see module docstring)."""
+        if kv_cache:
+            return self._generate_kv(tokens, new_tokens)
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
         toks = jnp.asarray(tokens)
         t0 = time.perf_counter()
+        prefill_s = 0.0
         for step in range(new_tokens):
             if self.mode == "baseline" and step > 0:
                 # baseline keeps the model resident: only re-infer
@@ -301,8 +381,138 @@ class PipeloadEngine:
                 logits = self._forward_once(toks, ledger, events, t0)
             nxt = jnp.argmax(logits, -1).astype(toks.dtype)[:, None]
             toks = jnp.concatenate([toks, nxt], axis=1)
+            if step == 0:
+                nxt.block_until_ready()
+                prefill_s = time.perf_counter() - t0
         toks.block_until_ready()
         lat = time.perf_counter() - t0
         return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
                               loads=sum(1 for e in events
-                                        if e[1] == "load_end"))
+                                        if e[1] == "load_end"),
+                              new_tokens=new_tokens, prefill_s=prefill_s,
+                              decode_s=lat - prefill_s)
+
+    # ------------------------------------------------------------------
+    def _generate_kv(self, tokens, new_tokens: int
+                     ) -> Tuple[jnp.ndarray, RunStats]:
+        """Incremental decode: one cache-capturing prefill, then
+        ``new_tokens - 1`` single-token passes over the same pipeline."""
+        if new_tokens <= 0:   # match the kv_cache=False path: no-op run
+            return jnp.asarray(tokens), RunStats(self.mode, self.m, 0.0, 0,
+                                                 [], kv_cache=True)
+        events: List[Tuple[float, str, str]] = []
+        ledger = _Ledger(self.budget)
+        toks = jnp.asarray(tokens)
+        b, s0 = toks.shape
+        total = s0 + new_tokens
+        names = self.layer_names
+        n = len(names)
+        per_layer_cache = self.cfg.cache_bytes(b, total)
+        cache_total = n * per_layer_cache
+        self._check_kv_budget(cache_total, per_layer_cache)
+
+        caches: Dict[str, dict] = {}
+        t0 = time.perf_counter()
+        self._ensure_aux(ledger, events, t0)
+        # Reserve ALL cache pages up front: the Inference Agent raises
+        # S_dest, so letting it block on S_stop mid-pipeline would deadlock;
+        # the floor check above guarantees this acquire never waits, and
+        # loaders then see the correct streaming headroom from round one.
+        ledger.acquire(cache_total, lambda: False)
+        events.append((time.perf_counter() - t0, "cache_reserve",
+                       str(cache_total)))
+        x = self.fns["embed"](self._resident["embed"], toks)
+
+        # ---- prefill: pipelined pass that also captures per-layer caches
+        def prefill_apply(k, w, h):
+            h, cache = self.fns["layer_cache"](w, h, total)
+            h.block_until_ready()
+            caches[names[k]] = cache
+            events.append((time.perf_counter() - t0, "cache_alloc",
+                           names[k]))
+            return h
+
+        if self.mode == "baseline":
+            weights = getattr(self, "_baseline_weights", None)
+            if weights is None:
+                weights = {}
+                for name in names:
+                    ledger.acquire(self.shards[name]["bytes"], lambda: False)
+                    weights[name] = self._load(name)
+                    events.append((time.perf_counter() - t0, "load_end",
+                                   name))
+                self._baseline_weights = weights
+            else:
+                for name in names:   # already resident from an earlier run
+                    ledger.acquire(self.shards[name]["bytes"],
+                                   lambda: False)
+            for k, name in enumerate(names):
+                x = prefill_apply(k, weights[name], x)
+        else:
+            destroy = self.mode == "pipeload"
+            x = self._run_pipeline(x, ledger, events, t0, destroy,
+                                   apply_fn=prefill_apply)
+        logits = self.fns["head"](self._resident["head"], x)
+        nxt = jnp.argmax(logits, -1).astype(toks.dtype)[:, None]
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        nxt.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+
+        # ---- decode: one single-token pipeline round per remaining token
+        def decode_apply(pos):
+            def apply(k, w, h):
+                h, caches[names[k]] = self.fns["layer_decode"](
+                    w, h, caches[names[k]], pos)
+                h.block_until_ready()
+                return h
+            return apply
+
+        for step in range(1, new_tokens):
+            pos = s0 + step - 1          # cache slot of the token we feed
+            events.append((time.perf_counter() - t0, "token", str(step)))
+            x = self.fns["embed"](self._resident["embed"], toks[:, -1:])
+            if self.mode == "baseline":
+                for k, name in enumerate(names):
+                    x = decode_apply(pos)(k, self._baseline_weights[name], x)
+            else:
+                x = self._run_pipeline(x, ledger, events, t0,
+                                       self.mode == "pipeload",
+                                       apply_fn=decode_apply(pos))
+            logits = self.fns["head"](self._resident["head"], x)
+            nxt = jnp.argmax(logits, -1).astype(toks.dtype)[:, None]
+            toks = jnp.concatenate([toks, nxt], axis=1)
+
+        toks.block_until_ready()
+        lat = time.perf_counter() - t0
+        caches.clear()                   # free cache pages ...
+        ledger.release(cache_total)      # ... and return them to the budget
+        return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
+                              loads=sum(1 for e in events
+                                        if e[1] == "load_end"),
+                              new_tokens=new_tokens, prefill_s=prefill_s,
+                              decode_s=lat - prefill_s,
+                              cache_bytes=cache_total, kv_cache=True)
+
+    def _check_kv_budget(self, cache_total: int, per_layer_cache: int):
+        """The KV budget floor: other layers + all cache pages + the pinned
+        window + one streaming layer must fit, or the pipeline deadlocks
+        with every loader parked on S_stop.  Non-destroying modes
+        (baseline / pipeswitch) keep the WHOLE model resident for a round,
+        so their floor is the full model + cache."""
+        if self.budget is None:
+            return
+        other = sum(s["bytes"] for s in self.shards.values()
+                    if s["kind"] != "layer")
+        layer_sizes = [self.shards[nm]["bytes"] for nm in self.layer_names]
+        if self.mode == "pipeload":
+            pinned = sum(layer_sizes[:self.pin])
+            streaming = max(layer_sizes[self.pin:], default=0)
+        else:
+            pinned, streaming = sum(layer_sizes), 0
+        floor = other + cache_total + pinned + streaming
+        if self.budget < floor:
+            raise ValueError(
+                f"budget {self.budget} below the KV decode floor {floor} "
+                f"(other={other} cache={cache_total} pinned={pinned} "
+                f"one_layer={streaming}); use the generation-aware planner "
+                f"(Hermes.plan_generate) to pick a feasible configuration")

@@ -5,6 +5,12 @@
     profile = hermes.profile()                  # §IV-1
     schedule = hermes.plan([b1, b2, None])      # §IV-2
     logits, stats = hermes.execute(tokens, budget_bytes=b1)   # §IV-3
+
+Generation workloads get the generation-aware tier:
+
+    gplan = hermes.plan_generate([b1], prompt_len=128, new_tokens=32)[0]
+    stats = hermes.execute(tokens, generate=32, kv_cache=True,
+                           budget_bytes=b1)     # picks (m, pin) jointly
 """
 from __future__ import annotations
 
@@ -12,7 +18,7 @@ from pathlib import Path
 from typing import Dict, List, Optional
 
 from repro.core.engine import PipeloadEngine, RunStats
-from repro.core.planner import PlanEntry, plan
+from repro.core.planner import GenPlanEntry, PlanEntry, plan, plan_generate
 from repro.core.profiler import load_profile, profile_model, save_profile
 from repro.models.config import ModelConfig
 
@@ -45,6 +51,18 @@ class Hermes:
     def best_agents(self, budget_bytes: Optional[int]) -> int:
         return self.plan([budget_bytes])[0].num_agents
 
+    def plan_generate(self, budgets: List[Optional[int]], *,
+                      batch: int = 1, prompt_len: int = 128,
+                      new_tokens: int = 32,
+                      max_agents: Optional[int] = None,
+                      max_pin: Optional[int] = None) -> List[GenPlanEntry]:
+        """Generation-aware schedule: joint (num_agents, pin_window) with
+        KV-cache bytes charged against the budget."""
+        cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
+        return plan_generate(self.profile(), budgets, new_tokens=new_tokens,
+                             cache_bytes_per_layer=cb, max_agents=max_agents,
+                             max_pin=max_pin)
+
     # ---- Execution Engine ----------------------------------------------
     def engine(self, *, mode: str = "pipeload",
                budget_bytes: Optional[int] = None,
@@ -60,11 +78,28 @@ class Hermes:
     def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
                 budget_bytes: Optional[int] = None,
                 num_agents: Optional[int] = None,
-                pin_window: int = 0) -> RunStats:
+                pin_window: Optional[int] = None,
+                kv_cache: bool = False) -> RunStats:
+        if (kv_cache and generate and mode == "pipeload"
+                and (num_agents is None or pin_window is None)):
+            # generation-aware tier picks (num_agents, pin_window) jointly
+            b, s0 = tokens.shape
+            g = self.plan_generate([budget_bytes], batch=b, prompt_len=s0,
+                                   new_tokens=generate)[0]
+            if not g.feasible:
+                raise ValueError(
+                    f"no feasible generation schedule for budget "
+                    f"{budget_bytes}: best candidate predicts peak "
+                    f"{g.predicted_peak_bytes} bytes ({g.cache_bytes} of "
+                    f"KV cache); raise the budget or shrink "
+                    f"batch/prompt/new_tokens")
+            num_agents = g.num_agents if num_agents is None else num_agents
+            pin_window = g.pin_window if pin_window is None else pin_window
         eng = self.engine(mode=mode, budget_bytes=budget_bytes,
-                          num_agents=num_agents, pin_window=pin_window)
+                          num_agents=num_agents,
+                          pin_window=pin_window or 0)
         if generate:
-            _, stats = eng.run_generate(tokens, generate)
+            _, stats = eng.run_generate(tokens, generate, kv_cache=kv_cache)
         else:
             _, stats = eng.run_single(tokens)
         return stats

@@ -1,25 +1,53 @@
 """Per-layer executable modules for the PIPELOAD Execution Engine.
 
 The engine operates at shard granularity: ``embed`` -> N x ``layer`` ->
-``head``.  Each module is a jitted full-sequence forward (the paper's
-engine re-runs the pipeline per generated token for GPT-style models, so
-decode is prefix re-inference, matching §V-B2 semantics).
+``head``.  Two generation regimes are supported:
+
+  * **re-prefill** (the paper's §V-B2 semantics): ``layer`` is a jitted
+    full-sequence forward with ``make_cache=False``; GPT decode re-runs the
+    whole prefix every token.
+  * **KV-cache incremental decode** (beyond-paper): ``layer_cache`` is the
+    prefill that ALSO emits the layer's KV cache, padded out to
+    ``total_len`` so later single-token writes are in-place updates, and
+    ``layer_decode`` advances one token against that cache.  The decode
+    attention can run through the Pallas flash-decoding kernel
+    (``attn_impl="pallas"``, kernels/flash_decode.py) — "auto" picks it on
+    TPU, the jnp online softmax elsewhere.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import common
-from repro.models.dense_lm import layer_prefill
+from repro.models.dense_lm import layer_decode, layer_prefill
 from repro.models.config import ModelConfig
 
 
-def build_module_fns(cfg: ModelConfig) -> Dict[str, Callable]:
-    """Returns jitted {embed, layer, head} apply functions."""
+def resolve_attn_impl(attn_impl: Optional[str]) -> Optional[str]:
+    """"auto" -> Pallas kernel on TPU, jnp online softmax elsewhere
+    (interpret-mode Pallas is a validation tool, not a fast path)."""
+    if attn_impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else None
+    return attn_impl
+
+
+def _pad_seq(a: jax.Array, total_len: int) -> jax.Array:
+    """Grow a cache leaf (B, S, ...) to (B, total_len, ...) in place-0."""
+    if a.shape[1] >= total_len:
+        return a
+    out = jnp.zeros((a.shape[0], total_len) + a.shape[2:], a.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(out, a, 0, axis=1)
+
+
+def build_module_fns(cfg: ModelConfig,
+                     attn_impl: Optional[str] = "auto") -> Dict[str, Callable]:
+    """Returns jitted {embed, layer, layer_cache, layer_decode, head}
+    apply functions."""
+    impl = resolve_attn_impl(attn_impl)
 
     @jax.jit
     def embed_apply(weights, tokens):
@@ -33,6 +61,25 @@ def build_module_fns(cfg: ModelConfig) -> Dict[str, Callable]:
                                   make_cache=False)
         return out
 
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def layer_cache_apply(weights, x, total_len: int):
+        """Prefill one layer AND capture its KV cache, padded to
+        ``total_len`` slots so decode steps write in place."""
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        out, cache, _ = layer_prefill(weights, x, cfg, None, positions,
+                                      make_cache=True)
+        cache = jax.tree.map(lambda a: _pad_seq(a, total_len), cache)
+        return out, cache
+
+    @jax.jit
+    def layer_decode_apply(weights, x, cache, pos):
+        """One token (B, 1, D) against this layer's cache; ``pos`` is the
+        global position of the new token (traced: no per-step recompile)."""
+        out, new_cache = layer_decode(weights, x, cfg, None, cache, pos,
+                                      attn_impl=impl)
+        return out, new_cache
+
     @jax.jit
     def head_apply(weights, x):
         h = common.rms_norm(x, weights["final_norm"], cfg.norm_eps)
@@ -40,4 +87,6 @@ def build_module_fns(cfg: ModelConfig) -> Dict[str, Callable]:
             return (h[:, -1] @ weights["lm_head"]).astype(jnp.float32)
         return h[:, -1].astype(jnp.float32)
 
-    return {"embed": embed_apply, "layer": layer_apply, "head": head_apply}
+    return {"embed": embed_apply, "layer": layer_apply,
+            "layer_cache": layer_cache_apply,
+            "layer_decode": layer_decode_apply, "head": head_apply}

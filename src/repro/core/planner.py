@@ -1,4 +1,4 @@
-"""Pipeline Planner (Hermes §IV-2).
+"""Pipeline Planner (Hermes §IV-2) + generation-aware tier (beyond-paper).
 
 From the Layer Profiler's output it builds a PIPELOAD execution schedule:
 for each memory constraint, the number of Loading Agents that minimises
@@ -12,9 +12,17 @@ pre-run":
   2. a discrete-event simulation of the engine (the "pre-run") that
      replays the exact agent striping, in-order inference and destruction
      to get latency and true peak memory.
+
+The generation-aware tier (``plan_generate``) plans KV-cache decode
+workloads: it charges ``num_layers * cache_bytes`` of KV pages to the peak
+model, amortises layer loads over ``new_tokens`` pipeline rounds, and
+searches ``(num_agents, pin_window)`` JOINTLY — pinned layers trade budget
+headroom (they stay resident) against reloads (they skip the disk in every
+decode round).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import heapq
 import math
@@ -30,6 +38,20 @@ class PlanEntry:
     feasible: bool
 
 
+@dataclasses.dataclass
+class GenPlanEntry:
+    """A generation-aware schedule: joint (num_agents, pin_window)."""
+    budget_bytes: Optional[int]
+    num_agents: int
+    pin_window: int
+    predicted_latency_s: float        # prefill + all decode rounds
+    predicted_prefill_s: float
+    predicted_per_token_s: float      # one decode round
+    predicted_peak_bytes: int         # weights + KV cache
+    cache_bytes: int                  # total KV pages (all layers)
+    feasible: bool
+
+
 # ---------------------------------------------------------------------------
 # Tier 1: analytic model
 # ---------------------------------------------------------------------------
@@ -42,36 +64,67 @@ def analytic_latency(n_layers: int, m: int, t_load: float,
 
 
 def analytic_peak(m: int, layer_bytes: int, other_bytes: int,
-                  inflight: int = 2) -> int:
-    """~(m + c) layers resident: m loading + c awaiting destruction."""
-    return (m + inflight) * layer_bytes + other_bytes
+                  inflight: int = 2, cache_bytes: int = 0,
+                  pin_window: int = 0,
+                  n_layers: Optional[int] = None) -> int:
+    """~(m + c) layers resident: m loading + c awaiting destruction.
+
+    Generation-aware extras: ``cache_bytes`` (total KV pages, resident for
+    the whole run) and ``pin_window`` pinned layers (resident across
+    decode rounds on top of the streaming window).  With ``n_layers`` the
+    streaming term is clamped to the layers that actually stream — a
+    fully-pinned stack has NO streaming window, only the pinned bytes."""
+    streaming = m + inflight
+    if n_layers is not None:
+        streaming = min(streaming, max(n_layers - pin_window, 0))
+    return ((streaming + pin_window) * layer_bytes + other_bytes
+            + cache_bytes)
 
 
 # ---------------------------------------------------------------------------
 # Tier 2: discrete-event simulation (the planner's "pre-run")
 # ---------------------------------------------------------------------------
 def simulate(profile: Dict, m: int,
-             budget_bytes: Optional[int] = None) -> Tuple[float, int]:
+             budget_bytes: Optional[int] = None, *,
+             pin_window: int = 0, retain_window: int = 0,
+             extra_resident_bytes: int = 0,
+             t_comp_key: str = "t_comp") -> Tuple[float, int]:
     """Event-driven replay of PIPELOAD.  Returns (latency_s, peak_bytes).
 
     Models: m loaders (each strictly sequential over its stripe, reserving
     ledger bytes at load START), one inference agent (in-order), destruction
     at compute completion, loaders blocked while resident + next > budget
     (the paper's S_stop), woken at the next destruction.
+
+    Generation-aware extras (all default to the paper's single-pass
+    semantics): the first ``pin_window`` layers are already resident
+    (their bytes are charged up front, their loads are free, they are
+    never destroyed); the first ``retain_window`` layers load normally
+    but are never destroyed (the engine's PREFILL round, where the
+    pinned prefix becomes resident); ``extra_resident_bytes`` models
+    KV-cache pages held for the whole round; ``t_comp_key`` selects
+    which per-shard compute time drives the inference agent
+    (``"t_decode"`` for one-token rounds, falling back to ``t_comp``
+    when a profile predates decode timing).
     """
     layers = [s for s in profile["shards"] if s["kind"] == "layer"]
     n = len(layers)
+    pin = min(max(pin_window, 0), n)
+    keep = max(pin, min(max(retain_window, 0), n))   # never destroyed
     t_load = [s["t_load"] for s in layers]
-    t_comp = [s["t_comp"] for s in layers]
+    t_comp = [s.get(t_comp_key, s["t_comp"]) for s in layers]
     nbytes = [s["bytes"] for s in layers]
-    other = profile["other_bytes"]
+    other = profile["other_bytes"] + extra_resident_bytes
 
-    resident = other
+    resident = other + sum(nbytes[:pin])
     peak = resident
-    stripes = [list(range(i, n, m)) for i in range(m)]
+    streaming = list(range(pin, n))      # layers that actually hit the disk
+    stripes = [streaming[i::m] for i in range(m)]
     agent_pos = [0] * m
     ready_at = [math.inf] * n
     loaded_done = [False] * n
+    for k in range(pin):                 # pinned: S_comp already raised
+        ready_at[k], loaded_done[k] = 0.0, True
     next_inf = 0
     inf_free_at = 0.0
     latency = 0.0
@@ -101,8 +154,17 @@ def simulate(profile: Dict, m: int,
         agent_pos[a] += 1
         push(now + t_load[k], "load_done", (a << 20) | k)
 
+    def advance_inference(now: float):
+        nonlocal next_inf, inf_free_at
+        while next_inf < n and loaded_done[next_inf]:
+            start = max(ready_at[next_inf], inf_free_at)
+            inf_free_at = start + t_comp[next_inf]
+            push(inf_free_at, "inf_done", next_inf)
+            next_inf += 1
+
     for a in range(m):
         try_start_load(a, 0.0)
+    advance_inference(0.0)            # pinned prefix computes immediately
     if not events and n > 0:
         return math.inf, peak         # budget below a single layer
 
@@ -116,18 +178,15 @@ def simulate(profile: Dict, m: int,
             loaded_done[k] = True
             try_start_load(a, now)    # next stripe item (may block)
             # inference agent: start any now-unblocked in-order layers
-            while next_inf < n and loaded_done[next_inf]:
-                start = max(ready_at[next_inf], inf_free_at)
-                inf_free_at = start + t_comp[next_inf]
-                push(inf_free_at, "inf_done", next_inf)
-                next_inf += 1
+            advance_inference(now)
         else:  # inf_done -> destruction (daemon) frees bytes, wakes loaders
             k = payload
-            resident -= nbytes[k]
             latency = max(latency, now)
-            waiting, blocked[:] = list(blocked), []
-            for a in waiting:
-                try_start_load(a, now)   # re-appends itself if still blocked
+            if k >= keep:             # pinned/retained: never destroyed
+                resident -= nbytes[k]
+                waiting, blocked[:] = list(blocked), []
+                for a in waiting:
+                    try_start_load(a, now)  # re-appends itself if blocked
     if next_inf < n:
         return math.inf, peak         # could not finish (budget deadlock)
     return latency, peak
@@ -163,5 +222,81 @@ def plan(profile: Dict, budgets: List[Optional[int]],
                     cand.feasible == best.feasible
                     and cand.predicted_latency_s < best.predicted_latency_s):
                 best = cand
+        entries.append(best)
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Generation-aware planner (KV-cache decode workloads)
+# ---------------------------------------------------------------------------
+def _with_decode_times(profile: Dict) -> Dict:
+    """Fill per-shard ``t_decode`` when the profile predates decode timing:
+    one-token compute scales ~linearly down from the profiled prefill seq."""
+    if all("t_decode" in s for s in profile["shards"]
+           if s["kind"] == "layer"):
+        return profile
+    prof = copy.deepcopy(profile)
+    seq = max(int(prof.get("seq", 1)), 1)
+    for s in prof["shards"]:
+        if s["kind"] == "layer":
+            s.setdefault("t_decode", s["t_comp"] / seq)
+    return prof
+
+
+def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
+                  new_tokens: int, cache_bytes_per_layer: int,
+                  max_agents: Optional[int] = None,
+                  max_pin: Optional[int] = None) -> List[GenPlanEntry]:
+    """Joint (num_agents, pin_window) schedule for KV-cache generation.
+
+    Total latency model: one cache-capturing prefill round (full-sequence
+    compute, every layer loaded) + ``new_tokens - 1`` decode rounds
+    (one-token compute, only NON-pinned layers reloaded).  Loads amortise
+    over rounds exactly as the engine replays them; KV pages are extra
+    resident bytes in every round.  Feasibility = finite latency and peak
+    (weights + cache) within budget in BOTH round shapes.
+    """
+    prof = _with_decode_times(profile)
+    n = prof["num_layers"]
+    lb = prof["layer_bytes"]
+    other = prof["other_bytes"]
+    cache_total = n * cache_bytes_per_layer
+    max_m = max_agents or min(n, 12)
+    pin_cap = n if max_pin is None else min(max_pin, n)
+    rounds = max(new_tokens - 1, 0)
+
+    entries: List[GenPlanEntry] = []
+    for budget in budgets:
+        best: Optional[GenPlanEntry] = None
+        for pin in range(pin_cap + 1):
+            # tier 1: analytic feasibility prunes the (m, pin) grid
+            ms = [m for m in range(1, max_m + 1)
+                  if budget is None
+                  or analytic_peak(m, lb, other, cache_bytes=cache_total,
+                                   pin_window=pin, n_layers=n) <= budget]
+            if not ms:
+                ms = [1] if pin == 0 else []    # keep one fallback candidate
+            for m in ms:
+                # tier 2: pre-run both round shapes.  The prefill round
+                # loads every layer but RETAINS the pinned prefix (the
+                # engine never destroys it), so it is pin-dependent too.
+                pre_lat, pre_peak = simulate(
+                    prof, m, budget, retain_window=pin,
+                    extra_resident_bytes=cache_total)
+                dec_lat, dec_peak = simulate(
+                    prof, m, budget, pin_window=pin,
+                    extra_resident_bytes=cache_total,
+                    t_comp_key="t_decode")
+                total = pre_lat + rounds * dec_lat
+                peak = max(pre_peak, dec_peak)
+                ok = math.isfinite(total) and (budget is None
+                                               or peak <= budget)
+                cand = GenPlanEntry(budget, m, pin, total, pre_lat, dec_lat,
+                                    int(peak), cache_total, ok)
+                if best is None or (cand.feasible and not best.feasible) or (
+                        cand.feasible == best.feasible
+                        and cand.predicted_latency_s
+                        < best.predicted_latency_s):
+                    best = cand
         entries.append(best)
     return entries

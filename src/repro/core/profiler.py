@@ -1,8 +1,9 @@
 """Layer Profiler (Hermes §IV-1).
 
 Measures, per shard of a partitioned checkpoint: load time (real disk ->
-host -> device), compute time (jitted forward after warmup) and byte size.
-The profile feeds the Pipeline Planner.
+host -> device), compute time (jitted forward after warmup), one-token
+decode time against a KV cache (feeds the generation-aware planner) and
+byte size.  The profile feeds the Pipeline Planner.
 """
 from __future__ import annotations
 
@@ -58,19 +59,35 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
             out = fn(w, x_in)
             out.block_until_ready()
             t_comps.append(time.perf_counter() - t0)
+        row = {
+            "name": name, "kind": kind, "bytes": shard["bytes"],
+            "t_load": float(np.median(t_loads)),
+            "t_comp": float(np.median(t_comps)),
+        }
+        if kind == "layer":
+            # one-token decode time for the generation-aware planner:
+            # single-token step against a seq-length KV cache
+            _, cache = fns["layer_cache"](w, x, seq + 1)
+            step = fns["layer_decode"]
+            step(w, x[:, -1:], cache, seq)[0].block_until_ready()  # compile
+            t_decs = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                y, _ = step(w, x[:, -1:], cache, seq)
+                y.block_until_ready()
+                t_decs.append(time.perf_counter() - t0)
+            row["t_decode"] = float(np.median(t_decs))
         if kind == "embed":
             x = out
         elif kind == "layer":
             x = out
-        profile["shards"].append({
-            "name": name, "kind": kind, "bytes": shard["bytes"],
-            "t_load": float(np.median(t_loads)),
-            "t_comp": float(np.median(t_comps)),
-        })
+        profile["shards"].append(row)
 
     layers = [s for s in profile["shards"] if s["kind"] == "layer"]
     profile["layer_t_load"] = float(np.median([s["t_load"] for s in layers]))
     profile["layer_t_comp"] = float(np.median([s["t_comp"] for s in layers]))
+    profile["layer_t_decode"] = float(np.median([s["t_decode"]
+                                                 for s in layers]))
     profile["layer_bytes"] = int(np.median([s["bytes"] for s in layers]))
     profile["other_bytes"] = int(sum(s["bytes"] for s in profile["shards"]
                                      if s["kind"] != "layer"))

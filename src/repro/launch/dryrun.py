@@ -27,7 +27,8 @@ from repro.analysis.hlo import analyze_hlo
 from repro.analysis.roofline import (model_flops, params_count,
                                      roofline_terms)
 from repro.configs import get_config, list_archs, long_variant
-from repro.launch.mesh import (HBM_PER_CHIP, make_production_mesh)
+from repro.launch.mesh import (HBM_PER_CHIP, compat_make_mesh,
+                               compat_set_mesh, make_production_mesh)
 from repro.launch.specs import (INPUT_SHAPES, batch_pspecs, batch_specs,
                                 cache_pspecs, cache_specs, make_ctx, named)
 from repro.launch.stepfns import (make_prefill_step, make_serve_step,
@@ -77,13 +78,10 @@ def _mesh_for(tag: str):
     if n >= 512:
         return make_production_mesh(multi_pod=(tag == "multipod"))
     # scaled-down dev meshes keep both axes >1
-    from jax.sharding import AxisType
     if tag == "multipod":
-        return jax.make_mesh((2, max(n // 8, 1), 4),
-                             ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((max(n // 4, 1), 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat_make_mesh((2, max(n // 8, 1), 4),
+                                ("pod", "data", "model"))
+    return compat_make_mesh((max(n // 4, 1), 4), ("data", "model"))
 
 
 def dryrun_one(arch: str, shape_name: str, mesh_tag: str,
@@ -114,7 +112,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_tag: str,
     bspecs = batch_specs(cfg, shape)
     b_pspecs = batch_pspecs(cfg, shape, ctx)
 
-    with jax.sharding.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         if shape.kind == "train":
             pspecs = fsdp_pspecs(params_shape, mesh, base_specs)
             ctx = _with_layer_specs(ctx, cfg, pspecs)

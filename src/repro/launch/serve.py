@@ -4,8 +4,12 @@
         --budget-mb 600 --requests 4 --new-tokens 8
 
 Builds (or reuses) a layer-partitioned checkpoint, profiles it, lets the
-Pipeline Planner pick the Loading-Agent count for the memory budget, and
-serves batched requests through the Execution Engine.
+Pipeline Planner pick the schedule for the memory budget, and serves
+batched requests through the Execution Engine.  KV-cache incremental
+decode is the default serving mode — the generation-aware planner picks
+``(num_agents, pin_window)`` jointly with cache bytes charged against the
+budget; ``--no-kv-cache`` falls back to the paper's per-token re-prefill
+engine (§V-B2).
 """
 from __future__ import annotations
 
@@ -35,7 +39,8 @@ def ensure_checkpoint(cfg, seed: int = 0) -> Path:
 
 def run(arch: str, *, budget_mb: float | None = None, requests: int = 2,
         prompt_len: int = 16, new_tokens: int = 8, reduced: bool = True,
-        num_agents: int | None = None, pin_window: int = 0):
+        num_agents: int | None = None, pin_window: int | None = None,
+        kv_cache: bool = True):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
@@ -43,22 +48,42 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 2,
     hermes = Hermes(ckpt, cfg)
     budget = int(budget_mb * 2**20) if budget_mb else None
 
-    plan = hermes.plan([budget])[0]
-    print(f"planner: budget={budget_mb}MB -> {plan.num_agents} agents, "
-          f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
-          f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
+    if kv_cache:
+        g = hermes.plan_generate([budget], batch=requests,
+                                 prompt_len=prompt_len,
+                                 new_tokens=new_tokens)[0]
+        if not g.feasible:
+            raise SystemExit(
+                f"error: no feasible KV-decode schedule for "
+                f"budget={budget_mb}MB (best candidate predicts peak "
+                f"{g.predicted_peak_bytes/2**20:.1f}MB, of which "
+                f"{g.cache_bytes/2**20:.1f}MB KV cache); raise the budget, "
+                f"shrink requests/prompt/new-tokens, or pass --no-kv-cache")
+        agents = num_agents or g.num_agents
+        pin = g.pin_window if pin_window is None else pin_window
+        print(f"planner(gen): budget={budget_mb}MB -> {agents} agents, "
+              f"pin={pin}, predicted {g.predicted_per_token_s*1e3:.0f}"
+              f"ms/token, peak {g.predicted_peak_bytes/2**20:.0f}MB "
+              f"(cache {g.cache_bytes/2**20:.1f}MB)")
+    else:
+        plan = hermes.plan([budget])[0]
+        agents, pin = num_agents or plan.num_agents, pin_window or 0
+        print(f"planner: budget={budget_mb}MB -> {agents} agents, "
+              f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
+              f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
 
     eng = hermes.engine(mode="pipeload", budget_bytes=budget,
-                        num_agents=num_agents or plan.num_agents,
-                        pin_window=pin_window)
-    eng.warmup(requests, prompt_len)
+                        num_agents=agents, pin_window=pin)
+    eng.warmup(requests, prompt_len, decode=kv_cache,
+               total_len=prompt_len + new_tokens)
     rng = np.random.default_rng(0)
     toks = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
     t0 = time.time()
-    out, stats = eng.run_generate(toks, new_tokens)
+    out, stats = eng.run_generate(toks, new_tokens, kv_cache=kv_cache)
     dt = time.time() - t0
     print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
-          f"({requests*new_tokens/dt:.1f} tok/s), "
+          f"({requests*new_tokens/dt:.1f} tok/s, "
+          f"{stats.per_token_s*1e3:.0f}ms/token), "
           f"peak {stats.peak_bytes/2**20:.0f}MB, {stats.loads} shard loads")
     return out, stats
 
@@ -71,13 +96,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--num-agents", type=int, default=None)
-    ap.add_argument("--pin-window", type=int, default=0)
+    ap.add_argument("--pin-window", type=int, default=None)
+    ap.add_argument("--no-kv-cache", action="store_true",
+                    help="paper's per-token re-prefill engine (§V-B2)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
         prompt_len=args.prompt_len, new_tokens=args.new_tokens,
         reduced=not args.full, num_agents=args.num_agents,
-        pin_window=args.pin_window)
+        pin_window=args.pin_window, kv_cache=not args.no_kv_cache)
 
 
 if __name__ == "__main__":

@@ -373,13 +373,47 @@ def _combine_partials(o, m, l):
     return o_star / jnp.maximum(l_star, 1e-30)[..., None]
 
 
-def flash_decode(q, k_cache, v_cache, valid, ctx: Optional[ShardingCtx]):
+def _pallas_decode(q, k_cache, v_cache, valid):
+    """Route single-device decode through the Pallas flash-decoding kernel
+    (kernels/flash_decode.py; interpret=True off-TPU via kernels.ops).
+
+    The kernel works in a flat (BH, ...) layout with one KV row per query
+    head, so the grouped cache is broadcast across the G query heads — the
+    G-fold read amplification is the price of the kernel's HBM->VMEM
+    streaming pipeline and only applies on this explicitly-requested path.
+    Requires dhk == dhv (GQA; MLA's asymmetric latent head falls back).
+    """
+    from repro.kernels import ops
+
+    b, kv, g, dh = q.shape
+    s, dv = k_cache.shape[1], v_cache.shape[-1]
+    bh = b * kv * g
+    qf = q.reshape(bh, dh)
+    kf = jnp.broadcast_to(k_cache.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kv, g, s, dh)).reshape(bh, s, dh)
+    vf = jnp.broadcast_to(v_cache.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kv, g, s, dv)).reshape(bh, s, dv)
+    validf = jnp.broadcast_to(valid[:, None, None], (b, kv, g, s)
+                              ).reshape(bh, s)
+    out = ops.decode(qf, kf, vf, validf, block_k=_pick_block(s, 512))
+    return out.reshape(b, kv, g, dv)
+
+
+def flash_decode(q, k_cache, v_cache, valid, ctx: Optional[ShardingCtx],
+                 impl: Optional[str] = None):
     """q: (B,KV,G,dhq); caches: (B,S,KV,dh*); valid: (B,S) -> (B,KV,G,dhv).
 
     With ``ctx``: cache sequence dim sharded over the model axis; partials
     combined with an all-gather of (o, m, l) (tiny: no seq dim).
+
+    ``impl="pallas"`` (single-device only) runs the Pallas flash-decoding
+    kernel instead of the jnp online softmax — the engine's KV decode path
+    selects it so the cache streams HBM -> VMEM in blocks.
     """
     if ctx is None:
+        if (impl == "pallas"
+                and k_cache.shape[-1] == v_cache.shape[-1]):
+            return _pallas_decode(q, k_cache, v_cache, valid)
         o, m, l = _decode_partial(q, k_cache, v_cache, valid)
         return _combine_partials(o[None], m[None], l[None]).astype(v_cache.dtype)
 
@@ -492,7 +526,7 @@ def gqa_mrope_prefill(params, x, cfg: ModelConfig, ctx, positions3, *,
 
 
 def gqa_decode(params, x, cfg: ModelConfig, ctx, cache, pos, *,
-               mrope_positions3=None):
+               mrope_positions3=None, attn_impl=None):
     """x: (B,1,D); cache{k,v}: (B,S,KV,dh); pos: scalar -> (out, cache)."""
     b = x.shape[0]
     kv, g, dh = cfg.n_kv_heads, cfg.q_heads_per_kv, cfg.head_dim
@@ -523,7 +557,7 @@ def gqa_decode(params, x, cfg: ModelConfig, ctx, cache, pos, *,
         valid = idx[None, :] <= pos
     valid = jnp.broadcast_to(valid, (b, s_cache))
     qh = q.reshape(b, kv, g, dh)
-    out = flash_decode(qh, k_cache, v_cache, valid, ctx)
+    out = flash_decode(qh, k_cache, v_cache, valid, ctx, impl=attn_impl)
     out = out.reshape(b, 1, kv * g * dh) @ params["w_o"]
     return out, {"k": k_cache, "v": v_cache}
 

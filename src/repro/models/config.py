@@ -100,6 +100,14 @@ class ModelConfig:
             return self.kv_lora_rank + self.rope_head_dim
         return 2 * self.n_kv_heads * self.head_dim
 
+    def cache_bytes(self, batch: int, seq: int) -> int:
+        """Per-LAYER KV-cache bytes for a (batch, seq) decode workload.
+
+        The engine charges this to the memory ledger per layer and the
+        Pipeline Planner adds ``num_layers * cache_bytes`` to its peak
+        model, so weights + cache share one budget."""
+        return int(batch * seq * self.kv_cache_dim * self.jnp_dtype.itemsize)
+
     def validate(self) -> None:
         assert self.family in FAMILIES, self.family
         if self.n_kv_heads:

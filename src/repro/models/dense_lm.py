@@ -90,13 +90,15 @@ def layer_prefill(p, x, cfg: ModelConfig, ctx, positions, *, make_cache,
     return x, cache, aux
 
 
-def layer_decode(p, x, cfg: ModelConfig, ctx, cache, pos, *, mrope3=None):
+def layer_decode(p, x, cfg: ModelConfig, ctx, cache, pos, *, mrope3=None,
+                 attn_impl=None):
     h = common.rms_norm(x, p["attn_norm"], cfg.norm_eps)
     if cfg.attention == "mla":
         a, cache = attn.mla_decode(p["attn"], h, cfg, ctx, cache, pos)
     else:
         a, cache = attn.gqa_decode(p["attn"], h, cfg, ctx, cache, pos,
-                                   mrope_positions3=mrope3)
+                                   mrope_positions3=mrope3,
+                                   attn_impl=attn_impl)
     x = x + a
     x, _ = _ffn(p, x, cfg, ctx)
     return x, cache

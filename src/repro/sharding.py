@@ -8,10 +8,21 @@ device) falls back to purely local dense paths.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - jax < 0.6 location
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+# replication-check kwarg renamed check_rep -> check_vma across jax versions
+_NO_REP_CHECK = {
+    ("check_vma" if "check_vma" in inspect.signature(_shard_map).parameters
+     else "check_rep"): False}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,10 +85,7 @@ def constrain_layer_params(ctx: Optional[ShardingCtx], layer_params):
         return layer_params
     from jax.sharding import PartitionSpec as _P
 
-    try:
-        from jax import shard_map
-    except ImportError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map  # type: ignore
+    shard_map = _shard_map
 
     def f(x, spec: _P):
         if not isinstance(spec, _P):
@@ -99,11 +107,12 @@ def constrain_layer_params(ctx: Optional[ShardingCtx], layer_params):
         def gather(w):
             return jax.lax.all_gather(w, gather_axes, axis=axis, tiled=True)
 
-        # check_vma off: the VMA checker can't statically prove all-gather
-        # output replication, but a full tiled all_gather over 'data' is
+        # replication check off (check_vma on jax >= 0.6, check_rep
+        # before): the checker can't statically prove all-gather output
+        # replication, but a full tiled all_gather over 'data' is
         # replicated on that axis by construction
         return shard_map(gather, mesh=ctx.mesh, in_specs=_P(*entries),
-                         out_specs=_P(*out_entries), check_vma=False)(x)
+                         out_specs=_P(*out_entries), **_NO_REP_CHECK)(x)
 
     return jax.tree.map(f, layer_params, ctx.layer_param_specs,
                         is_leaf=lambda v: isinstance(v, _P))

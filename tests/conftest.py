@@ -8,4 +8,9 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# make `from helpers....` importable at collection time (hypothesis shim)
+TESTS = Path(__file__).resolve().parent
+if str(TESTS) not in sys.path:
+    sys.path.insert(0, str(TESTS))
+
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,79 @@
+"""Optional-``hypothesis`` shim: property tests degrade, never explode.
+
+The seed image does not ship ``hypothesis`` (it is an extra — see
+``pyproject.toml``).  Importing it unconditionally made `pytest` fail at
+COLLECTION time, taking every test in the module down with it.  Test
+modules import ``given / settings / st`` from here instead:
+
+  * with hypothesis installed, the real library is re-exported unchanged;
+  * without it, ``@given`` becomes a deterministic smoke loop — each
+    strategy draws ``N_EXAMPLES`` values from an RNG seeded by the test
+    name, so the property still gets exercised (repeatably) on a handful
+    of points instead of being skipped outright.
+
+Only the strategy surface the suite uses is stubbed: ``integers``,
+``floats``, ``sampled_from``, ``booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+N_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _FallbackStrategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    @staticmethod
+    def sampled_from(xs) -> _Strategy:
+        xs = list(xs)
+        return _Strategy(lambda r: xs[r.randrange(len(xs))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def _fallback_given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(fn.__name__)       # deterministic per test
+            for _ in range(N_EXAMPLES):
+                drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn params from pytest's fixture resolution: the
+        # wrapper fills them, they are not fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def _fallback_settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    given = _fallback_given
+    settings = _fallback_settings
+    st = _FallbackStrategies

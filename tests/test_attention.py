@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.models.attention import (_masked_attention_fallback,
                                     chunked_attention, flash_decode,

@@ -1,0 +1,289 @@
+"""KV-cache incremental decode: engine, modules and generation-aware
+planner (beyond-paper §V-B2 replacement)."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import Hermes, PipeloadEngine
+from repro.core.modules import build_module_fns
+from repro.core.planner import analytic_peak, plan_generate, simulate
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="module")
+def gpt2s(tmp_path_factory):
+    """Small-but-real GPT-2-geometry checkpoint on disk."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=6, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=1024, vocab_size=1000, vocab_pad_to=8, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s"
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    partition_and_save(params, cfg, path)
+    return cfg, path
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return np.random.default_rng(1).integers(0, 1000, (1, 24))
+
+
+# ---------------------------------------------------------------------------
+# module-level logits equivalence: prefill+decode == full re-prefill
+# ---------------------------------------------------------------------------
+def test_layer_cache_decode_matches_full_forward(gpt2s):
+    cfg, path = gpt2s
+    fns = build_module_fns(cfg, attn_impl=None)
+    eng = PipeloadEngine(path, cfg, mode="baseline")
+    w = eng._load(eng.layer_names[0])
+
+    s = 16
+    x_full = jax.random.normal(jax.random.PRNGKey(3), (2, s + 1, cfg.d_model))
+    want = fns["layer"](w, x_full)                    # full-seq forward
+
+    out, cache = fns["layer_cache"](w, x_full[:, :s], s + 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want[:, :s]),
+                               atol=1e-4, rtol=1e-4)
+    got, _ = fns["layer_decode"](w, x_full[:, s:], cache, s)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(want[:, s]), atol=1e-4, rtol=1e-4)
+
+
+def test_kv_generate_matches_reprefill_all_modes(gpt2s, toks):
+    cfg, path = gpt2s
+    new = 4
+    ref = None
+    for mode, kv in [("baseline", False), ("baseline", True),
+                     ("pipeswitch", True), ("pipeload", True)]:
+        eng = PipeloadEngine(path, cfg, mode=mode, num_agents=2)
+        eng.warmup(1, toks.shape[1], decode=kv,
+                   total_len=toks.shape[1] + new)
+        out, stats = eng.run_generate(toks, new, kv_cache=kv)
+        if ref is None:
+            ref = np.asarray(out)
+        else:
+            np.testing.assert_array_equal(np.asarray(out), ref)
+        if kv:
+            assert stats.kv_cache and stats.cache_bytes > 0
+            assert stats.new_tokens == new
+            allocs = stats.event_log(["cache_alloc"])
+            assert len(allocs) == cfg.num_layers
+        assert stats.per_token_s > 0
+
+
+def test_kv_pipeload_budget_respected(gpt2s, toks):
+    cfg, path = gpt2s
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    new = 3
+    cache_total = cfg.num_layers * cfg.cache_bytes(1, toks.shape[1] + new)
+    budget = other + cache_total + 3 * layer_b
+
+    eng_b = PipeloadEngine(path, cfg, mode="baseline").warmup(1, 24)
+    ref, _ = eng_b.run_generate(toks, new)
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    eng.warmup(1, 24, decode=True, total_len=toks.shape[1] + new)
+    out, stats = eng.run_generate(toks, new, kv_cache=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.peak_bytes <= budget
+
+
+def test_kv_budget_floor_raises(gpt2s, toks):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=1024)   # absurdly small
+    with pytest.raises(ValueError, match="KV decode floor"):
+        eng.run_generate(toks, 2, kv_cache=True)
+
+
+def test_kv_pipeswitch_floor_is_whole_model(gpt2s, toks):
+    """pipeswitch never destroys during a round: a budget that fits a few
+    layers but not the whole model must raise, not deadlock."""
+    cfg, path = gpt2s
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    budget = other + 3 * layer_b          # fine for pipeload, not pipeswitch
+    eng = PipeloadEngine(path, cfg, mode="pipeswitch", budget_bytes=budget)
+    with pytest.raises(ValueError, match="KV decode floor"):
+        eng.run_generate(toks, 2, kv_cache=True)
+
+
+def test_kv_budget_at_floor_with_many_agents(gpt2s, toks):
+    """Budget == the decode floor with m > 1: loaders must grant ledger
+    bytes in layer order or an out-of-order agent steals the single slot
+    of headroom and the pipeline deadlocks."""
+    cfg, path = gpt2s
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    new = 2
+    cache_total = cfg.num_layers * cfg.cache_bytes(1, toks.shape[1] + new)
+    floor = other + cache_total + layer_b
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=3,
+                         budget_bytes=floor)
+    eng.warmup(1, toks.shape[1], decode=True,
+               total_len=toks.shape[1] + new)
+    out, stats = eng.run_generate(toks, new, kv_cache=True)
+    assert stats.peak_bytes <= floor
+    eng_b = PipeloadEngine(path, cfg, mode="baseline").warmup(1, 24)
+    ref, _ = eng_b.run_generate(toks, new)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_hermes_execute_infeasible_budget_raises(gpt2s, toks):
+    cfg, path = gpt2s
+    h = Hermes(path, cfg)
+    h.profile(batch=1, seq=24, force=True)
+    with pytest.raises(ValueError, match="no feasible generation"):
+        h.execute(toks, generate=2, kv_cache=True, budget_bytes=1024)
+
+
+def test_kv_zero_new_tokens_is_noop(gpt2s, toks):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    out, stats = eng.run_generate(toks, 0, kv_cache=True)
+    assert out.shape == toks.shape
+    assert stats.new_tokens == 0 and stats.loads == 0
+
+
+def test_kv_pinned_window_reduces_reloads(gpt2s, toks):
+    cfg, path = gpt2s
+    new = 3
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         pin_window=4)
+    eng.warmup(1, 24, decode=True, total_len=toks.shape[1] + new)
+    out_pin, st_pin = eng.run_generate(toks, new, kv_cache=True)
+    eng2 = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    eng2.warmup(1, 24, decode=True, total_len=toks.shape[1] + new)
+    out_ref, st_ref = eng2.run_generate(toks, new, kv_cache=True)
+    np.testing.assert_array_equal(np.asarray(out_pin), np.asarray(out_ref))
+    assert st_pin.loads < st_ref.loads
+
+
+def test_pallas_decode_impl_matches_jnp(gpt2s):
+    cfg, path = gpt2s
+    fns_jnp = build_module_fns(cfg, attn_impl=None)
+    fns_pl = build_module_fns(cfg, attn_impl="pallas")  # interpret on CPU
+    eng = PipeloadEngine(path, cfg, mode="baseline")
+    w = eng._load(eng.layer_names[0])
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, cfg.d_model))
+    _, cache = fns_jnp["layer_cache"](w, x, 9)
+    x1 = jax.random.normal(jax.random.PRNGKey(6), (1, 1, cfg.d_model))
+    a, _ = fns_jnp["layer_decode"](w, x1, cache, 8)
+    b, _ = fns_pl["layer_decode"](w, x1, cache, 8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# generation-aware planner
+# ---------------------------------------------------------------------------
+def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes, seq=32):
+    return {
+        "num_layers": n, "seq": seq,
+        "layer_t_load": t_load, "layer_t_comp": t_comp,
+        "layer_bytes": layer_bytes, "other_bytes": other_bytes,
+        "shards": (
+            [{"name": "embed", "kind": "embed", "bytes": other_bytes,
+              "t_load": 0.0, "t_comp": 0.0}]
+            + [{"name": f"layer_{i:03d}", "kind": "layer",
+                "bytes": layer_bytes, "t_load": t_load, "t_comp": t_comp,
+                "t_decode": t_comp / seq}
+               for i in range(n)]),
+    }
+
+
+def test_plan_generate_respects_budget():
+    n, lb, other, cache = 12, 10, 5, 2
+    prof = synth_profile(n, 0.05, 0.004, lb, other)
+    budgets = [other + n * cache + k * lb for k in (2, 4, n)] + [None]
+    entries = plan_generate(prof, budgets, new_tokens=8,
+                            cache_bytes_per_layer=cache)
+    for e, budget in zip(entries, budgets):
+        assert e.feasible
+        assert e.cache_bytes == n * cache
+        if budget is not None:
+            assert e.predicted_peak_bytes <= budget
+    # bigger budget -> no slower (planner can always ignore extra room)
+    lats = [e.predicted_latency_s for e in entries]
+    assert all(lats[i] >= lats[i + 1] - 1e-9 for i in range(len(lats) - 1))
+
+
+def test_plan_generate_pins_when_unbudgeted():
+    """Load-bound decode rounds: pinning everything kills the reloads, so
+    the unconstrained plan should use a large pin window."""
+    prof = synth_profile(8, 0.05, 0.004, 10, 5)
+    e = plan_generate(prof, [None], new_tokens=16,
+                      cache_bytes_per_layer=1)[0]
+    assert e.pin_window == 8
+    assert e.predicted_per_token_s < prof["layer_t_load"]
+
+
+def test_plan_generate_fully_pinned_fits_exact_budget():
+    """A budget that exactly fits the all-pinned stack (zero decode
+    reloads) must surface that schedule — the tier-1 prune may not charge
+    a phantom streaming window on top of a fully-pinned stack."""
+    n, lb, other, cache = 8, 10, 5, 1
+    prof = synth_profile(n, 0.05, 0.004, lb, other)
+    budget = other + n * cache + n * lb
+    e = plan_generate(prof, [budget], new_tokens=16,
+                      cache_bytes_per_layer=cache)[0]
+    assert e.feasible and e.pin_window == n
+    assert e.predicted_per_token_s == pytest.approx(n * 0.004 / 32,
+                                                    rel=1e-6)
+
+
+def test_plan_generate_infeasible_budget():
+    prof = synth_profile(8, 0.05, 0.004, 10, 5)
+    # budget below other + cache + one layer: nothing fits
+    e = plan_generate(prof, [10], new_tokens=4,
+                      cache_bytes_per_layer=2)[0]
+    assert not e.feasible
+
+
+def test_simulate_pinned_and_cache_accounting():
+    prof = synth_profile(8, 0.05, 0.004, 10, 5)
+    lat0, peak0 = simulate(prof, 2)
+    lat_pin, peak_pin = simulate(prof, 2, pin_window=3,
+                                 extra_resident_bytes=7)
+    # pinned layers skip their loads -> no slower; resident floor grows
+    assert lat_pin <= lat0 + 1e-9
+    assert peak_pin >= 5 + 7 + 3 * 10
+    # fully pinned: latency is pure compute
+    lat_all, _ = simulate(prof, 1, pin_window=8)
+    assert lat_all == pytest.approx(8 * 0.004, rel=1e-6)
+
+
+def test_analytic_peak_generation_terms():
+    base = analytic_peak(2, 10, 5)
+    assert analytic_peak(2, 10, 5, cache_bytes=33) == base + 33
+    assert analytic_peak(2, 10, 5, pin_window=3) == base + 30
+
+
+def test_hermes_plan_generate_end_to_end(gpt2s, toks):
+    cfg, path = gpt2s
+    h = Hermes(path, cfg)
+    h.profile(batch=1, seq=24, force=True)
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    new = 3
+    cache_total = cfg.num_layers * cfg.cache_bytes(1, toks.shape[1] + new)
+    budget = other + cache_total + 3 * layer_b
+    g = h.plan_generate([budget], batch=1, prompt_len=toks.shape[1],
+                        new_tokens=new)[0]
+    assert g.feasible and g.predicted_peak_bytes <= budget
+    assert math.isfinite(g.predicted_latency_s)
+    # the planned schedule actually runs within budget
+    stats = h.execute(toks, generate=new, kv_cache=True,
+                      budget_bytes=budget)
+    assert stats.peak_bytes <= budget
+    assert stats.kv_cache

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.core.planner import (analytic_latency, analytic_peak, plan,
                                 simulate)
