@@ -1,0 +1,109 @@
+"""Continuous batching: aggregate tokens/s and peak bytes vs. in-flight
+count, against sequential single-request serving.
+
+For each in-flight count R the same R requests are served two ways under
+the SAME memory budget (sized by the planner for R concurrent caches):
+
+  * ``sequential`` — R consecutive ``run_generate(kv_cache=True)`` calls,
+    one weight stream per request per round (how the pre-scheduler engine
+    would serve a queue).
+  * ``batched``    — the continuous-batching scheduler: each PIPELOAD
+    round streams every layer once and applies it to all R stacked
+    requests (ragged positions), so the dominant weight-stream cost is
+    amortised R ways.
+
+Reports aggregate tokens/s, speedup, ledger peak (weights + all KV
+pages) and shard-load counts per arm (``experiments/bench/
+batch_decode.json``).  The acceptance check is ``speedup >= 2`` at R=4
+with ``within_budget == true`` on the batched arm.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint import load_manifest
+from repro.core import BatchScheduler, PipeloadEngine
+from benchmarks.common import csv_line, emit, ensure_paper_ckpt, paper_cfg
+
+MODEL = "gpt2_base"
+PROMPT_LEN = 32
+NEW_TOKENS = 8
+INFLIGHTS = (1, 2, 4)
+AGENTS = 4
+
+
+def run():
+    cfg, full_layers = paper_cfg(MODEL)
+    ckpt = ensure_paper_ckpt(MODEL)
+    man = load_manifest(ckpt)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    total = PROMPT_LEN + NEW_TOKENS
+    per_req_cache = cfg.num_layers * cfg.cache_bytes(1, total)
+
+    rows, lines = [], []
+    for r in INFLIGHTS:
+        # one budget for both arms: R concurrent caches + streaming room
+        budget = other + r * per_req_cache + (AGENTS + 2) * layer_b
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, (PROMPT_LEN,))
+                   for _ in range(r)]
+
+        # ---- sequential arm: R independent single-request runs
+        eng = PipeloadEngine(ckpt, cfg, mode="pipeload", num_agents=AGENTS,
+                             budget_bytes=budget)
+        eng.warmup(1, PROMPT_LEN, decode=True, total_len=total)
+        seq_s, seq_loads, seq_peak = 0.0, 0, 0
+        outs_seq = []
+        for p in prompts:
+            t0 = time.perf_counter()
+            out, st = eng.run_generate(p[None], NEW_TOKENS, kv_cache=True)
+            seq_s += time.perf_counter() - t0
+            seq_loads += st.loads
+            seq_peak = max(seq_peak, st.peak_bytes)
+            outs_seq.append(np.asarray(out)[0])
+        del eng
+
+        # ---- batched arm: one scheduler, everyone arrives at once
+        eng = PipeloadEngine(ckpt, cfg, mode="pipeload", num_agents=AGENTS,
+                             budget_bytes=budget)
+        sched = BatchScheduler(eng, max_inflight=r, max_total_len=total)
+        sched.warmup(prompt_lens=[PROMPT_LEN])
+        rids = [sched.submit(p, NEW_TOKENS) for p in prompts]
+        t0 = time.perf_counter()
+        outs, st = sched.run()
+        bat_s = time.perf_counter() - t0
+        del eng, sched
+
+        tokens = r * NEW_TOKENS
+        identical = all(np.array_equal(outs[rid], ref)
+                        for rid, ref in zip(rids, outs_seq))
+        row = {
+            "model": MODEL, "depth_frac": cfg.num_layers / full_layers,
+            "prompt_len": PROMPT_LEN, "new_tokens": NEW_TOKENS,
+            "inflight": r, "budget_bytes": budget,
+            "seq_latency_s": seq_s, "seq_tokens_per_s": tokens / seq_s,
+            "seq_loads": seq_loads, "seq_peak_bytes": seq_peak,
+            "batch_latency_s": bat_s,
+            "batch_tokens_per_s": tokens / bat_s,
+            "batch_loads": st.loads, "batch_peak_bytes": st.peak_bytes,
+            "batch_rounds": st.rounds,
+            "speedup": seq_s / bat_s,
+            "within_budget": st.peak_bytes <= budget,
+            "tokens_identical": identical,
+        }
+        rows.append(row)
+        lines.append(csv_line(
+            f"batch_decode[inflight={r}]",
+            bat_s / tokens * 1e6,
+            f"speedup_vs_sequential={row['speedup']:.2f},"
+            f"tok_s={row['batch_tokens_per_s']:.1f},"
+            f"peak_mb={st.peak_bytes/2**20:.0f},"
+            f"within_budget={row['within_budget']},"
+            f"loads={st.loads}_vs_{seq_loads},"
+            f"identical={identical}"))
+
+    emit(rows, "batch_decode")
+    return lines

@@ -19,6 +19,7 @@ BENCHES = {
     "table3": "benchmarks.bench_table3_memory",
     "fig7": "benchmarks.bench_fig7_constraints",
     "decode": "benchmarks.bench_decode",
+    "batch_decode": "benchmarks.bench_batch_decode",
     "roofline": "benchmarks.bench_roofline",
     "kernels": "benchmarks.bench_kernels",
 }

@@ -6,6 +6,11 @@ Shows the full Hermes flow: partition -> profile -> plan -> execute, and
 compares baseline / pipeswitch / pipeload / pipeload+kv latency+memory on
 this machine (pipeload+kv is the beyond-paper KV-cache decode path; its
 (num_agents, pin_window) come from the generation-aware planner).
+
+``--poisson RATE`` adds the continuous-batching finale: RATE requests
+per round arrive as a Poisson process and the scheduler amortises each
+weight-stream round across everyone in flight — watch the per-request
+admitted/finished rounds interleave while peak memory stays put.
 """
 import argparse
 import sys
@@ -18,7 +23,7 @@ import numpy as np
 
 from repro.checkpoint import partition_and_save
 from repro.configs import get_config
-from repro.core import Hermes, PipeloadEngine
+from repro.core import BatchScheduler, Hermes, PipeloadEngine
 from repro.models.api import build_model
 
 
@@ -26,6 +31,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget-mb", type=float, default=400.0)
     ap.add_argument("--new-tokens", type=int, default=6)
+    ap.add_argument("--poisson", type=float, default=0.5,
+                    help="continuous-batching demo arrival rate "
+                    "(requests/round; 0 disables the demo)")
+    ap.add_argument("--requests", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config("gpt2_base")
@@ -65,6 +74,40 @@ def main():
     print(f"pipeload+kv m={g.num_agents} pin={g.pin_window}: "
           f"{st.latency_s:6.2f}s  peak={st.peak_bytes/2**20:7.1f}MB  "
           f"loads={st.loads}  cache={st.cache_bytes/2**20:.1f}MB")
+
+    if args.poisson:
+        # ---- continuous batching: Poisson arrivals share weight streams
+        n = args.requests
+        gs = h.plan_generate([budget], prompt_len=toks.shape[1],
+                             new_tokens=args.new_tokens,
+                             max_inflight=n)[0]
+        fits = gs.feasible
+        if not fits:          # demo fallback, like the pipeload+kv run
+            gs = h.plan_generate([None], prompt_len=toks.shape[1],
+                                 new_tokens=args.new_tokens,
+                                 max_inflight=n)[0]
+        eng = PipeloadEngine(ckpt, cfg, mode="pipeload",
+                             num_agents=gs.num_agents,
+                             pin_window=gs.pin_window,
+                             budget_bytes=budget if fits else None)
+        sched = BatchScheduler(
+            eng, max_inflight=gs.inflight,
+            max_total_len=toks.shape[1] + args.new_tokens)
+        sched.warmup(prompt_lens=[toks.shape[1]])
+        rng = np.random.default_rng(0)
+        arrivals = np.floor(np.cumsum(
+            rng.exponential(1.0 / args.poisson, size=n))).astype(int)
+        for i in range(n):
+            p = rng.integers(0, cfg.vocab_size, (toks.shape[1],))
+            sched.submit(p, args.new_tokens, arrival_round=int(arrivals[i]))
+        outs, ss = sched.run()
+        print(f"scheduler   m={gs.num_agents} pin={gs.pin_window} "
+              f"inflight<={gs.inflight}: {ss.latency_s:6.2f}s  "
+              f"peak={ss.peak_bytes/2**20:7.1f}MB  loads={ss.loads}  "
+              f"{ss.tokens_per_s:.1f} tok/s over {ss.rounds} rounds")
+        for rid, req in sorted(sched.done.items()):
+            print(f"  req{rid}: arrived r{req.arrival_round} admitted "
+                  f"r{req.admitted_round} finished r{req.finished_round}")
 
 
 if __name__ == "__main__":

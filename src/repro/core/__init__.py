@@ -9,3 +9,5 @@ from repro.core.planner import (GenPlanEntry, PlanEntry,  # noqa: F401
                                 analytic_latency, plan, plan_generate,
                                 simulate)
 from repro.core.profiler import profile_model  # noqa: F401
+from repro.core.scheduler import (BatchScheduler, Request,  # noqa: F401
+                                  ServeStats)

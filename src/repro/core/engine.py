@@ -33,6 +33,12 @@ Generation runs in one of two regimes:
     ledger, so weights + cache share the budget), then each token is a
     single-token decode pass that still streams non-pinned layer weights
     through the Loading Agents but touches only O(1) new activations.
+
+Multi-request serving amortises the weight stream further:
+``run_batch_round`` runs ONE pipeline round whose Inference Agent step
+applies each streamed layer to EVERY in-flight request (stacked decode
+states with ragged positions + joining prefills) before destroying it —
+the continuous-batching scheduler (core/scheduler.py) drives it.
 """
 from __future__ import annotations
 
@@ -241,13 +247,20 @@ class PipeloadEngine:
                     ready_cond.notify_all()
 
         def daemon():
-            """Frees destroyed layers; wakes blocked loaders."""
+            """Frees destroyed layers; wakes blocked loaders.  Keeps
+            draining ``destroy_q`` after ``done`` is raised: every queued
+            S_dest entry holds ledger bytes, and exiting with entries
+            still queued would leak them into the next round (a serving
+            session shares ONE ledger across every round, so the leak
+            would slowly eat the streaming headroom)."""
             freed = 0
-            while freed < n and not done.is_set():
+            while freed < n:
                 with destroy_cond:
                     while not destroy_q and not done.is_set():
                         destroy_cond.wait(timeout=0.05)
                     if not destroy_q:
+                        if done.is_set():
+                            return
                         continue
                     k, w = destroy_q.pop(0)
                 name = names[k]
@@ -409,7 +422,7 @@ class PipeloadEngine:
         n = len(names)
         per_layer_cache = self.cfg.cache_bytes(b, total)
         cache_total = n * per_layer_cache
-        self._check_kv_budget(cache_total, per_layer_cache)
+        self._check_kv_budget(cache_total)
 
         caches: Dict[str, dict] = {}
         t0 = time.perf_counter()
@@ -493,14 +506,75 @@ class PipeloadEngine:
                               decode_s=lat - prefill_s,
                               cache_bytes=cache_total, kv_cache=True)
 
-    def _check_kv_budget(self, cache_total: int, per_layer_cache: int):
-        """The KV budget floor: other layers + all cache pages + the pinned
-        window + one streaming layer must fit, or the pipeline deadlocks
-        with every loader parked on S_stop.  Non-destroying modes
+    # ------------------------------------------------------------------
+    # Continuous-batching rounds (core/scheduler.py drives these)
+    # ------------------------------------------------------------------
+    def run_batch_round(self, ledger: _Ledger, events, t0, *,
+                        decode_x=None, decode_caches: Optional[Dict] = None,
+                        decode_pos=None, prefill_xs=(),
+                        prefill_total: int = 0):
+        """ONE pipeline round shared by every in-flight request.
+
+        The §III machinery (loading agents, S_comp/S_dest/S_stop, in-order
+        ledger grants) is untouched; only the Inference Agent's per-layer
+        step changes: layer ``k`` streams through memory ONCE and is
+        applied to
+
+          * the stacked single-token states of all decoding requests
+            (``decode_x`` (R, 1, D), per-layer caches with leading row
+            dim R, RAGGED ``decode_pos`` (R,) — each request sits at its
+            own cache slot), and
+          * each joining request's cache-capturing prefill
+            (``prefill_xs``: full-sequence states, caches padded to
+            ``prefill_total`` slots),
+
+        then destroyed.  This is the whole point of continuous batching:
+        the dominant weight-stream cost is paid once per ROUND, not once
+        per request.  The caller owns ``ledger``/``events``/``t0`` so
+        accounting spans the serving session, not a single call.
+
+        Returns ``(decode_x', decode_caches', prefill_outs,
+        prefill_caches)`` — the advanced decode states and, per prefill
+        job, its final hidden states and captured per-layer caches.
+        """
+        if self.mode == "baseline":
+            raise ValueError(
+                "run_batch_round needs a pipelined mode (pipeload / "
+                "pipeswitch); baseline keeps the model resident and has "
+                "no round to amortise")
+        names = self.layer_names
+        prefill_caches: List[Dict[str, dict]] = [{} for _ in prefill_xs]
+
+        def apply_fn(k, w, state):
+            dx, pxs = state
+            if dx is not None:
+                dx, decode_caches[names[k]] = self.fns["layer_decode"](
+                    w, dx, decode_caches[names[k]], decode_pos)
+                dx.block_until_ready()
+            nxt = []
+            for i, px in enumerate(pxs):
+                px, cache = self.fns["layer_cache"](w, px, prefill_total)
+                px.block_until_ready()
+                prefill_caches[i][names[k]] = cache
+                nxt.append(px)
+            return dx, nxt
+
+        self._ensure_aux(ledger, events, t0)
+        state = (decode_x, list(prefill_xs))
+        dx, pxs = self._run_pipeline(state, ledger, events, t0,
+                                     destroy=self.mode == "pipeload",
+                                     apply_fn=apply_fn)
+        return dx, decode_caches, pxs, prefill_caches
+
+    def _kv_floor(self, cache_total: int) -> int:
+        """Smallest budget that cannot deadlock a KV decode round holding
+        ``cache_total`` bytes of cache pages: other layers + all pages +
+        the pinned window + one streaming layer.  Non-destroying modes
         (baseline / pipeswitch) keep the WHOLE model resident for a round,
-        so their floor is the full model + cache."""
-        if self.budget is None:
-            return
+        so their floor is the full model + cache.  ``cache_total`` is the
+        TOTAL reservation — for continuous batching, the sum over every
+        in-flight request — which is what the scheduler's admission
+        control feeds back in before granting a new request its pages."""
         other = sum(s["bytes"] for s in self.shards.values()
                     if s["kind"] != "layer")
         layer_sizes = [self.shards[nm]["bytes"] for nm in self.layer_names]
@@ -509,10 +583,24 @@ class PipeloadEngine:
             streaming = max(layer_sizes[self.pin:], default=0)
         else:
             pinned, streaming = sum(layer_sizes), 0
-        floor = other + cache_total + pinned + streaming
+        return other + cache_total + pinned + streaming
+
+    def _check_kv_budget(self, cache_total: int, *, inflight: int = 1):
+        """Raise unless the budget clears the decode floor for the full
+        multi-request reservation (``cache_total`` bytes across
+        ``inflight`` concurrent requests); below it the pipeline deadlocks
+        with every loader parked on S_stop."""
+        if self.budget is None:
+            return
+        floor = self._kv_floor(cache_total)
         if self.budget < floor:
+            per_req = cache_total // max(inflight, 1)
             raise ValueError(
                 f"budget {self.budget} below the KV decode floor {floor} "
-                f"(other={other} cache={cache_total} pinned={pinned} "
-                f"one_layer={streaming}); use the generation-aware planner "
-                f"(Hermes.plan_generate) to pick a feasible configuration")
+                f"for {inflight} in-flight request(s) "
+                f"(cache={cache_total} = {inflight} x {per_req} "
+                f"cache-page bytes, plus other layers, the pinned window "
+                f"and one streaming layer); use the generation-aware "
+                f"planner (Hermes.plan_generate) to pick a feasible "
+                f"(num_agents, pin_window, max_inflight), or let the "
+                f"scheduler queue the request until pages free up")

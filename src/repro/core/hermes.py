@@ -55,13 +55,16 @@ class Hermes:
                       batch: int = 1, prompt_len: int = 128,
                       new_tokens: int = 32,
                       max_agents: Optional[int] = None,
-                      max_pin: Optional[int] = None) -> List[GenPlanEntry]:
+                      max_pin: Optional[int] = None,
+                      max_inflight: int = 1) -> List[GenPlanEntry]:
         """Generation-aware schedule: joint (num_agents, pin_window) with
-        KV-cache bytes charged against the budget."""
+        KV-cache bytes charged against the budget.  ``max_inflight > 1``
+        additionally searches the continuous-batching in-flight count
+        (capacity-first; see ``planner.plan_generate``)."""
         cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
         return plan_generate(self.profile(), budgets, new_tokens=new_tokens,
                              cache_bytes_per_layer=cb, max_agents=max_agents,
-                             max_pin=max_pin)
+                             max_pin=max_pin, max_inflight=max_inflight)
 
     # ---- Execution Engine ----------------------------------------------
     def engine(self, *, mode: str = "pipeload",
@@ -74,6 +77,38 @@ class Hermes:
                               num_agents=num_agents or 1,
                               budget_bytes=budget_bytes,
                               pin_window=pin_window)
+
+    def scheduler(self, *, budget_bytes: Optional[int] = None,
+                  max_inflight: int = 4, prompt_len: int = 128,
+                  new_tokens: int = 32,
+                  num_agents: Optional[int] = None,
+                  pin_window: Optional[int] = None,
+                  max_total_len: Optional[int] = None) -> "BatchScheduler":
+        """Continuous-batching serving facade: plan the
+        (num_agents, pin_window, inflight) triple for the budget, build
+        the engine, and wrap it in a ``BatchScheduler`` ready for
+        ``submit()``/``run()``.  ``prompt_len``/``new_tokens`` describe
+        the TYPICAL request (they size the padded cache reservation);
+        per-request lengths may vary below ``max_total_len``."""
+        from repro.core.scheduler import BatchScheduler
+        g = self.plan_generate([budget_bytes], prompt_len=prompt_len,
+                               new_tokens=new_tokens,
+                               max_inflight=max_inflight)[0]
+        if not g.feasible:
+            raise ValueError(
+                f"no feasible serving schedule for budget {budget_bytes}: "
+                f"best candidate predicts peak {g.predicted_peak_bytes} "
+                f"bytes ({g.cache_bytes} of KV cache at inflight="
+                f"{g.inflight}); raise the budget or shrink "
+                f"prompt/new_tokens")
+        eng = self.engine(mode="pipeload", budget_bytes=budget_bytes,
+                          num_agents=(num_agents if num_agents is not None
+                                      else g.num_agents),
+                          pin_window=(pin_window if pin_window is not None
+                                      else g.pin_window))
+        return BatchScheduler(eng, max_inflight=g.inflight,
+                              max_total_len=(max_total_len
+                                             or prompt_len + new_tokens))
 
     def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
                 budget_bytes: Optional[int] = None,

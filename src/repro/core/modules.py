@@ -74,8 +74,13 @@ def build_module_fns(cfg: ModelConfig,
 
     @jax.jit
     def layer_decode_apply(weights, x, cache, pos):
-        """One token (B, 1, D) against this layer's cache; ``pos`` is the
-        global position of the new token (traced: no per-step recompile)."""
+        """One token per sequence (B, 1, D) against this layer's cache.
+        ``pos`` is the global position of the new token — a scalar for the
+        single-request path, or a RAGGED (B,) vector when the batch stacks
+        concurrent requests whose sequences sit at different lengths (the
+        continuous-batching scheduler).  Traced either way: no per-step
+        recompile, and batched rounds reuse one executable per batch
+        size."""
         out, new_cache = layer_decode(weights, x, cfg, None, cache, pos,
                                       attn_impl=impl)
         return out, new_cache

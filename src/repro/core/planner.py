@@ -18,7 +18,10 @@ workloads: it charges ``num_layers * cache_bytes`` of KV pages to the peak
 model, amortises layer loads over ``new_tokens`` pipeline rounds, and
 searches ``(num_agents, pin_window)`` JOINTLY — pinned layers trade budget
 headroom (they stay resident) against reloads (they skip the disk in every
-decode round).
+decode round).  With ``max_inflight > 1`` it also searches the
+continuous-batching dimension: KV pages scale with the in-flight count
+while the weight stream does not, so the optimal
+``(num_agents, pin_window, inflight)`` triple changes with the budget.
 """
 from __future__ import annotations
 
@@ -40,16 +43,20 @@ class PlanEntry:
 
 @dataclasses.dataclass
 class GenPlanEntry:
-    """A generation-aware schedule: joint (num_agents, pin_window)."""
+    """A generation-aware schedule: joint (num_agents, pin_window) — and,
+    for serving workloads, the in-flight request count the budget
+    admits (``inflight``; 1 for plain single-request generation)."""
     budget_bytes: Optional[int]
     num_agents: int
     pin_window: int
     predicted_latency_s: float        # prefill + all decode rounds
     predicted_prefill_s: float
-    predicted_per_token_s: float      # one decode round
+    predicted_per_token_s: float      # one decode ROUND (all requests)
     predicted_peak_bytes: int         # weights + KV cache
-    cache_bytes: int                  # total KV pages (all layers)
+    cache_bytes: int                  # total KV pages (all in-flight reqs)
     feasible: bool
+    inflight: int = 1                 # concurrent requests in the batch
+    predicted_throughput_tps: float = 0.0  # inflight tokens / decode round
 
 
 # ---------------------------------------------------------------------------
@@ -88,7 +95,8 @@ def simulate(profile: Dict, m: int,
              budget_bytes: Optional[int] = None, *,
              pin_window: int = 0, retain_window: int = 0,
              extra_resident_bytes: int = 0,
-             t_comp_key: str = "t_comp") -> Tuple[float, int]:
+             t_comp_key: str = "t_comp",
+             batch: int = 1) -> Tuple[float, int]:
     """Event-driven replay of PIPELOAD.  Returns (latency_s, peak_bytes).
 
     Models: m loaders (each strictly sequential over its stripe, reserving
@@ -105,14 +113,18 @@ def simulate(profile: Dict, m: int,
     KV-cache pages held for the whole round; ``t_comp_key`` selects
     which per-shard compute time drives the inference agent
     (``"t_decode"`` for one-token rounds, falling back to ``t_comp``
-    when a profile predates decode timing).
+    when a profile predates decode timing); ``batch`` is the
+    continuous-batching in-flight count — the Inference Agent applies
+    each streamed layer to ``batch`` stacked requests, so compute times
+    scale linearly (a pessimistic bound: batched GEMMs amortise) while
+    load times do NOT — exactly the asymmetry the scheduler exploits.
     """
     layers = [s for s in profile["shards"] if s["kind"] == "layer"]
     n = len(layers)
     pin = min(max(pin_window, 0), n)
     keep = max(pin, min(max(retain_window, 0), n))   # never destroyed
     t_load = [s["t_load"] for s in layers]
-    t_comp = [s.get(t_comp_key, s["t_comp"]) for s in layers]
+    t_comp = [batch * s.get(t_comp_key, s["t_comp"]) for s in layers]
     nbytes = [s["bytes"] for s in layers]
     other = profile["other_bytes"] + extra_resident_bytes
 
@@ -246,8 +258,10 @@ def _with_decode_times(profile: Dict) -> Dict:
 def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
                   new_tokens: int, cache_bytes_per_layer: int,
                   max_agents: Optional[int] = None,
-                  max_pin: Optional[int] = None) -> List[GenPlanEntry]:
-    """Joint (num_agents, pin_window) schedule for KV-cache generation.
+                  max_pin: Optional[int] = None,
+                  max_inflight: int = 1) -> List[GenPlanEntry]:
+    """Joint (num_agents, pin_window, inflight) schedule for KV-cache
+    generation and continuous-batching serving.
 
     Total latency model: one cache-capturing prefill round (full-sequence
     compute, every layer loaded) + ``new_tokens - 1`` decode rounds
@@ -255,18 +269,31 @@ def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
     over rounds exactly as the engine replays them; KV pages are extra
     resident bytes in every round.  Feasibility = finite latency and peak
     (weights + cache) within budget in BOTH round shapes.
+
+    The batch dimension (``max_inflight > 1``) models the scheduler:
+    cache bytes scale linearly with the in-flight count and per-layer
+    compute scales with the stacked batch, but the weight stream does
+    NOT — one round serves everyone.  The search is CAPACITY-FIRST: it
+    picks the largest in-flight count the budget admits (serving as many
+    concurrent users as memory allows is the primary objective; per-round
+    latency barely moves with batch in the load-bound regime, so the
+    largest feasible batch is also throughput-optimal), then optimises
+    ``(num_agents, pin_window)`` for round latency at that count.
+    Capacity-first also makes the planner MONOTONE: a larger budget never
+    shrinks ``inflight``, because feasibility of a count only ever grows
+    with budget.
     """
     prof = _with_decode_times(profile)
     n = prof["num_layers"]
     lb = prof["layer_bytes"]
     other = prof["other_bytes"]
-    cache_total = n * cache_bytes_per_layer
     max_m = max_agents or min(n, 12)
     pin_cap = n if max_pin is None else min(max_pin, n)
     rounds = max(new_tokens - 1, 0)
 
-    entries: List[GenPlanEntry] = []
-    for budget in budgets:
+    def best_at(budget, r: int) -> Optional[GenPlanEntry]:
+        """Best (m, pin) candidate with ``r`` requests in flight."""
+        cache_total = n * cache_bytes_per_layer * r
         best: Optional[GenPlanEntry] = None
         for pin in range(pin_cap + 1):
             # tier 1: analytic feasibility prunes the (m, pin) grid
@@ -282,21 +309,37 @@ def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
                 # engine never destroys it), so it is pin-dependent too.
                 pre_lat, pre_peak = simulate(
                     prof, m, budget, retain_window=pin,
-                    extra_resident_bytes=cache_total)
+                    extra_resident_bytes=cache_total, batch=r)
                 dec_lat, dec_peak = simulate(
                     prof, m, budget, pin_window=pin,
                     extra_resident_bytes=cache_total,
-                    t_comp_key="t_decode")
+                    t_comp_key="t_decode", batch=r)
                 total = pre_lat + rounds * dec_lat
                 peak = max(pre_peak, dec_peak)
                 ok = math.isfinite(total) and (budget is None
                                                or peak <= budget)
+                tput = r / dec_lat if (dec_lat and math.isfinite(dec_lat)) \
+                    else 0.0
                 cand = GenPlanEntry(budget, m, pin, total, pre_lat, dec_lat,
-                                    int(peak), cache_total, ok)
+                                    int(peak), cache_total, ok,
+                                    inflight=r,
+                                    predicted_throughput_tps=tput)
                 if best is None or (cand.feasible and not best.feasible) or (
                         cand.feasible == best.feasible
                         and cand.predicted_latency_s
                         < best.predicted_latency_s):
                     best = cand
-        entries.append(best)
+        return best
+
+    entries: List[GenPlanEntry] = []
+    for budget in budgets:
+        chosen: Optional[GenPlanEntry] = None
+        for r in range(max(max_inflight, 1), 0, -1):   # capacity-first
+            cand = best_at(budget, r)
+            if cand is not None and cand.feasible:
+                chosen = cand
+                break
+            if r == 1:                 # nothing feasible: report the least
+                chosen = cand          # infeasible single-request schedule
+        entries.append(chosen)
     return entries

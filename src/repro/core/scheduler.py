@@ -1,0 +1,343 @@
+"""Continuous-batching scheduler: one weight stream serves every request.
+
+PIPELOAD's dominant cost is streaming layer weights through the Loading
+Agents, paid once per pipeline round — yet the single-request engine
+spends each round on ONE sequence, so serving N users costs N full weight
+streams per generated token.  The scheduler amortises the stream: each
+round, layer ``k`` is loaded once, applied to the stacked single-token
+hidden states of ALL in-flight requests (ragged positions — every request
+sits at its own cache slot) and to the cache-capturing prefill of
+requests admitted at this round boundary, then destroyed (``S_dest``).
+Aggregate throughput scales with the in-flight count while the per-round
+cost stays one weight stream.
+
+Lifecycle (all transitions happen at round boundaries, except retirement
+detection, which happens the instant a request's last token is sampled):
+
+    submit() -> QUEUED -> [admission] -> PREFILLING -> DECODING -> DONE
+                  ^                                       |
+                  |            cache pages released       |
+                  +------- (reusable at the SAME boundary)+
+
+Memory protocol: every request's KV pages are charged to the engine's
+``_Ledger`` — the same budget the streamed weights draw from.  Admission
+is FIFO and blocks (requests wait in the queue) whenever the
+post-admission decode floor
+
+    other_bytes + pinned + all in-flight cache pages + one streaming layer
+
+would exceed the budget, or the in-flight count would exceed
+``max_inflight``.  Retirement is the cache analogue of ``S_dest``: the
+round a request finishes, its pages are released immediately, so a queued
+request can be admitted with the freed bytes at the very same boundary.
+
+All caches are padded to ``max_total_len`` slots so stacked decode reuses
+one jitted executable per batch size (padding past a request's position
+is exactly masked out — softmax contributions are exact zeros — so
+batched decoding is token-for-token identical to sequential runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import PipeloadEngine, _Ledger
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request; scheduler-owned fields below ``rid``."""
+    rid: int
+    prompt: np.ndarray            # (S,) int token ids
+    max_new_tokens: int
+    arrival_round: int = 0        # earliest boundary it may be admitted at
+    # -- scheduler state ------------------------------------------------
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    generated: int = 0
+    admitted_round: int = -1
+    finished_round: int = -1
+    cache_bytes: int = 0          # ledger reservation while in flight
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+    @property
+    def pos(self) -> int:
+        """Cache slot of the token about to be fed (current length - 1)."""
+        return len(self.tokens) - 1
+
+
+@dataclasses.dataclass
+class ServeStats:
+    rounds: int
+    latency_s: float
+    peak_bytes: int
+    loads: int
+    new_tokens: int
+    requests: int
+    max_inflight_seen: int
+    cache_bytes_peak: int
+    events: List[Tuple[float, str, str]]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.new_tokens / self.latency_s if self.latency_s else 0.0
+
+    def event_log(self, kinds=None):
+        return [e for e in self.events if kinds is None or e[1] in kinds]
+
+
+class BatchScheduler:
+    """Round-boundary continuous batching over a ``PipeloadEngine``.
+
+    ``max_total_len`` bounds every request's prompt + generation length;
+    it fixes the padded cache shape so batched rounds compile once per
+    batch size.  ``max_inflight`` caps concurrency; the budget caps it
+    further through admission control (capacity-first: the planner's
+    ``plan_generate(..., max_inflight=...)`` picks the triple).
+    """
+
+    def __init__(self, engine: PipeloadEngine, *, max_inflight: int = 4,
+                 max_total_len: int = 128):
+        if engine.mode == "baseline":
+            raise ValueError("continuous batching needs a pipelined mode "
+                             "(pipeload / pipeswitch)")
+        self.engine = engine
+        self.max_inflight = max(1, max_inflight)
+        self.max_total_len = max_total_len
+        self.queue: List[Request] = []      # FIFO by (arrival_round, rid)
+        self.inflight: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.round = 0
+        self._next_rid = 0
+        # per-request-row stacked state (rows parallel to self.inflight)
+        self._caches: Optional[Dict[str, dict]] = None   # leaves (R, T, ...)
+        # serving-session accounting: ONE ledger across all rounds, so
+        # weights, caches and the pinned window share a single budget
+        self.ledger = _Ledger(engine.budget)
+        self.events: List[Tuple[float, str, str]] = []
+        self._t0 = time.perf_counter()
+        self._cache_resident = 0
+        self._cache_peak = 0
+        self._max_seen = 0
+        self._per_req_cache = (len(engine.layer_names)
+                               * engine.cfg.cache_bytes(1, max_total_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_round: int = 0) -> int:
+        """Queue a request; returns its id.
+
+        Raises if the request could NEVER be admitted — a prompt +
+        generation length beyond ``max_total_len``, or a cache
+        reservation that exceeds the budget floor even with zero other
+        requests in flight (admission would otherwise deadlock the FIFO
+        queue head forever)."""
+        prompt = np.asarray(prompt).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > self.max_total_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_total_len "
+                f"{self.max_total_len}")
+        self.engine._check_kv_budget(self._per_req_cache, inflight=1)
+        req = Request(self._next_rid, prompt, max_new_tokens,
+                      arrival_round=max(arrival_round, 0),
+                      cache_bytes=self._per_req_cache)
+        self._next_rid += 1
+        self.queue.append(req)
+        self.queue.sort(key=lambda r: (r.arrival_round, r.rid))
+        return req.rid
+
+    # ------------------------------------------------------------------
+    def _fits(self, extra_cache: int) -> bool:
+        """Would the decode floor still clear the budget after granting
+        ``extra_cache`` more page bytes?"""
+        if self.engine.budget is None:
+            return True
+        floor = self.engine._kv_floor(self._cache_resident + extra_cache)
+        return floor <= self.engine.budget
+
+    def _admit(self) -> List[Request]:
+        """FIFO admission at the current boundary.  Strict head-of-line:
+        all requests reserve the same padded cache size, so skipping the
+        head could never help; blocking keeps arrival order fair and is
+        deadlock-free (submit() rejected anything that can't fit alone,
+        and in-flight requests always retire in finite rounds)."""
+        admitted: List[Request] = []
+        while (self.queue
+               and self.queue[0].arrival_round <= self.round
+               and len(self.inflight) + len(admitted) < self.max_inflight
+               and self._fits(self.queue[0].cache_bytes)):
+            req = self.queue.pop(0)
+            # reserve the request's pages for its whole lifetime (never
+            # blocks: _fits checked the floor, and at a boundary nothing
+            # is streaming)
+            self.ledger.acquire(req.cache_bytes, lambda: False)
+            self._cache_resident += req.cache_bytes
+            self._cache_peak = max(self._cache_peak, self._cache_resident)
+            req.admitted_round = self.round
+            req.tokens = list(map(int, req.prompt))
+            self.events.append((time.perf_counter() - self._t0,
+                                "admit", f"req{req.rid}"))
+            admitted.append(req)
+        return admitted
+
+    def _retire(self, finished: List[Request]):
+        """S_dest for cache pages: release the ledger bytes the moment a
+        request completes so the next boundary can re-grant them."""
+        for req in finished:
+            self.ledger.release(req.cache_bytes)
+            self._cache_resident -= req.cache_bytes
+            req.finished_round = self.round
+            self.done[req.rid] = req
+            self.events.append((time.perf_counter() - self._t0,
+                                "retire", f"req{req.rid}"))
+
+    def _drop_rows(self, keep: List[int]):
+        if self._caches is None:
+            return
+        if not keep:
+            self._caches = None
+            return
+        idx = np.asarray(keep)
+        self._caches = {name: jax.tree.map(lambda a: a[idx], c)
+                        for name, c in self._caches.items()}
+
+    def _append_rows(self, new_caches: List[Dict[str, dict]]):
+        stacks = ([self._caches] if self._caches is not None else []) \
+            + new_caches
+        if not stacks:
+            return
+        if len(stacks) == 1:
+            self._caches = stacks[0]
+            return
+        self._caches = {
+            name: jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                               *(s[name] for s in stacks))
+            for name in stacks[0]}
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One round boundary + (if there is work) one pipeline round.
+        Returns False once every submitted request has retired."""
+        eng = self.engine
+        admitted = self._admit()
+        if not self.inflight and not admitted:
+            if not self.queue:
+                return False
+            # idle gap: fast-forward to the next arrival (no weight stream)
+            self.round = max(self.round + 1,
+                             min(r.arrival_round for r in self.queue))
+            return True
+
+        fns, t0 = eng.fns, self._t0
+        self.events.append((time.perf_counter() - t0, "round",
+                            str(self.round)))
+        # ---- build the decode batch (stacked last tokens, ragged pos)
+        dec_x = dec_pos = None
+        if self.inflight:
+            last = np.asarray([[r.tokens[-1]] for r in self.inflight],
+                              np.int32)
+            emb = eng._resident.get("embed")
+            if emb is None:
+                eng._ensure_aux(self.ledger, self.events, t0)
+                emb = eng._resident["embed"]
+            dec_x = fns["embed"](emb, jnp.asarray(last))
+            dec_pos = jnp.asarray([r.pos for r in self.inflight], jnp.int32)
+        # ---- build prefill jobs for this boundary's admissions
+        pre_xs = []
+        if admitted:
+            eng._ensure_aux(self.ledger, self.events, t0)
+            emb = eng._resident["embed"]
+            for req in admitted:
+                toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
+                pre_xs.append(fns["embed"](emb, toks))
+
+        dec_x, caches, pre_outs, pre_caches = eng.run_batch_round(
+            self.ledger, self.events, t0,
+            decode_x=dec_x,
+            decode_caches=self._caches,
+            decode_pos=dec_pos,
+            prefill_xs=pre_xs,
+            prefill_total=self.max_total_len)
+        self._caches = caches
+
+        # ---- heads: one greedy token per request this round
+        head = eng._resident["head"]
+        if dec_x is not None:
+            logits = fns["head"](head, dec_x)                  # (R, V)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for row, req in enumerate(self.inflight):
+                req.tokens.append(int(nxt[row]))
+                req.generated += 1
+        for i, req in enumerate(admitted):
+            logits = fns["head"](head, pre_outs[i])            # (1, V)
+            req.tokens.append(int(jnp.argmax(logits, -1)[0]))
+            req.generated = 1
+
+        # ---- merge admissions, then retire mid-stream finishers
+        self._append_rows(pre_caches)
+        self.inflight.extend(admitted)
+        self._max_seen = max(self._max_seen, len(self.inflight))
+        finished = [r for r in self.inflight if r.done]
+        if finished:
+            keep = [i for i, r in enumerate(self.inflight) if not r.done]
+            self.inflight = [self.inflight[i] for i in keep]
+            self._drop_rows(keep)
+            self._retire(finished)
+        self.round += 1
+        return bool(self.inflight or self.queue)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Tuple[Dict[int, np.ndarray], ServeStats]:
+        """Drain the queue; returns ({rid: full token sequence}, stats)."""
+        t_start = time.perf_counter()
+        while self.step():
+            pass
+        lat = time.perf_counter() - t_start
+        outs = {rid: np.asarray(r.tokens)
+                for rid, r in sorted(self.done.items())}
+        stats = ServeStats(
+            rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
+            loads=sum(1 for e in self.events if e[1] == "load_end"),
+            new_tokens=sum(r.generated for r in self.done.values()),
+            requests=len(self.done), max_inflight_seen=self._max_seen,
+            cache_bytes_peak=self._cache_peak, events=self.events)
+        return outs, stats
+
+    # ------------------------------------------------------------------
+    def warmup(self, prompt_lens=()) -> "BatchScheduler":
+        """Pre-compile the serving executables: the batched decode fn for
+        every batch size up to ``max_inflight`` (plus head/embed at those
+        shapes) and the prefill fn per distinct prompt length — so the
+        timed serving loop never stalls the Inference Agent on a jit
+        compile while the Loading Agents race ahead."""
+        eng = self.engine
+        fns = eng.fns
+        emb = eng._resident.get("embed") or eng._load("embed")
+        head = eng._resident.get("head") or eng._load("head")
+        w0 = eng._load(eng.layer_names[0])
+        T = self.max_total_len
+        for s in sorted(set(int(p) for p in prompt_lens)):
+            x = fns["embed"](emb, jnp.zeros((1, s), jnp.int32))
+            px, _ = fns["layer_cache"](w0, x, T)
+            fns["head"](head, px).block_until_ready()
+        x1 = fns["embed"](emb, jnp.zeros((1, 1), jnp.int32))
+        _, c1 = fns["layer_cache"](w0, x1, T)
+        for r in range(1, self.max_inflight + 1):
+            cr = jax.tree.map(lambda a: jnp.concatenate([a] * r), c1)
+            xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
+            dr, _ = fns["layer_decode"](w0, xr, cr,
+                                        jnp.zeros((r,), jnp.int32))
+            fns["head"](head, dr).block_until_ready()
+        del w0, emb, head
+        self._t0 = time.perf_counter()
+        return self

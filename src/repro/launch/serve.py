@@ -1,15 +1,20 @@
-"""Serving launcher: PIPELOAD-backed batched inference.
+"""Serving launcher: continuous-batching PIPELOAD inference.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-base \
-        --budget-mb 600 --requests 4 --new-tokens 8
+        --budget-mb 600 --requests 8 --max-inflight 4 --new-tokens 8
 
 Builds (or reuses) a layer-partitioned checkpoint, profiles it, lets the
-Pipeline Planner pick the schedule for the memory budget, and serves
-batched requests through the Execution Engine.  KV-cache incremental
-decode is the default serving mode — the generation-aware planner picks
-``(num_agents, pin_window)`` jointly with cache bytes charged against the
-budget; ``--no-kv-cache`` falls back to the paper's per-token re-prefill
-engine (§V-B2).
+generation-aware Pipeline Planner pick the ``(num_agents, pin_window,
+inflight)`` triple for the memory budget, and serves the requests through
+the continuous-batching scheduler (core/scheduler.py): each PIPELOAD
+round streams every layer ONCE and applies it to all in-flight requests,
+so aggregate tokens/s scales with concurrency while peak memory stays
+within the budget.
+
+``--arrival-rate R`` replays a Poisson arrival process (R requests per
+round on average, deterministic under ``--seed``) instead of an
+everyone-at-once burst; ``--no-kv-cache`` falls back to the paper's
+sequential per-token re-prefill engine (§V-B2) for comparison.
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ import numpy as np
 
 from repro.checkpoint import partition_and_save
 from repro.configs import get_config
-from repro.core import Hermes
+from repro.core import BatchScheduler, Hermes
 from repro.models.api import build_model
 
 CKPT_ROOT = Path("/tmp/repro_ckpts")
@@ -37,66 +42,111 @@ def ensure_checkpoint(cfg, seed: int = 0) -> Path:
     return path
 
 
-def run(arch: str, *, budget_mb: float | None = None, requests: int = 2,
+def poisson_arrivals(n: int, rate: float | None,
+                     rng: np.random.Generator) -> list[int]:
+    """Arrival round per request: a Poisson process at ``rate`` requests
+    per ROUND (rounds are the scheduler's clock, so the trace replays
+    identically on any machine).  ``rate=None``/0 = all arrive at once."""
+    if not rate:
+        return [0] * n
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+
+def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         prompt_len: int = 16, new_tokens: int = 8, reduced: bool = True,
         num_agents: int | None = None, pin_window: int | None = None,
-        kv_cache: bool = True):
+        kv_cache: bool = True, max_inflight: int = 4,
+        arrival_rate: float | None = None, seed: int = 0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
     ckpt = ensure_checkpoint(cfg)
     hermes = Hermes(ckpt, cfg)
     budget = int(budget_mb * 2**20) if budget_mb else None
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
 
-    if kv_cache:
-        g = hermes.plan_generate([budget], batch=requests,
-                                 prompt_len=prompt_len,
-                                 new_tokens=new_tokens)[0]
-        if not g.feasible:
-            raise SystemExit(
-                f"error: no feasible KV-decode schedule for "
-                f"budget={budget_mb}MB (best candidate predicts peak "
-                f"{g.predicted_peak_bytes/2**20:.1f}MB, of which "
-                f"{g.cache_bytes/2**20:.1f}MB KV cache); raise the budget, "
-                f"shrink requests/prompt/new-tokens, or pass --no-kv-cache")
-        agents = num_agents or g.num_agents
-        pin = g.pin_window if pin_window is None else pin_window
-        print(f"planner(gen): budget={budget_mb}MB -> {agents} agents, "
-              f"pin={pin}, predicted {g.predicted_per_token_s*1e3:.0f}"
-              f"ms/token, peak {g.predicted_peak_bytes/2**20:.0f}MB "
-              f"(cache {g.cache_bytes/2**20:.1f}MB)")
-    else:
+    if not kv_cache:
+        # paper's engine (§V-B2): sequential re-prefill, one weight
+        # stream per request per token — the baseline the scheduler beats
         plan = hermes.plan([budget])[0]
         agents, pin = num_agents or plan.num_agents, pin_window or 0
         print(f"planner: budget={budget_mb}MB -> {agents} agents, "
               f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
               f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
+        eng = hermes.engine(mode="pipeload", budget_bytes=budget,
+                            num_agents=agents, pin_window=pin)
+        eng.warmup(requests, prompt_len)
+        t0 = time.time()
+        out, stats = eng.run_generate(prompts, new_tokens, kv_cache=False)
+        dt = time.time() - t0
+        print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
+              f"({requests*new_tokens/dt:.1f} tok/s), "
+              f"peak {stats.peak_bytes/2**20:.0f}MB, "
+              f"{stats.loads} shard loads")
+        return out, stats
+
+    hermes.profile(batch=1, seq=prompt_len)
+    g = hermes.plan_generate([budget], prompt_len=prompt_len,
+                             new_tokens=new_tokens,
+                             max_inflight=max_inflight)[0]
+    if not g.feasible:
+        raise SystemExit(
+            f"error: no feasible serving schedule for budget="
+            f"{budget_mb}MB (best candidate predicts peak "
+            f"{g.predicted_peak_bytes/2**20:.1f}MB, of which "
+            f"{g.cache_bytes/2**20:.1f}MB KV cache at inflight="
+            f"{g.inflight}); raise the budget, shrink "
+            f"prompt/new-tokens, or pass --no-kv-cache")
+    agents = num_agents or g.num_agents
+    pin = g.pin_window if pin_window is None else pin_window
+    print(f"planner(serve): budget={budget_mb}MB -> {agents} agents, "
+          f"pin={pin}, inflight={g.inflight}, predicted "
+          f"{g.predicted_throughput_tps:.1f} tok/s aggregate, peak "
+          f"{g.predicted_peak_bytes/2**20:.0f}MB "
+          f"(cache {g.cache_bytes/2**20:.1f}MB)")
 
     eng = hermes.engine(mode="pipeload", budget_bytes=budget,
                         num_agents=agents, pin_window=pin)
-    eng.warmup(requests, prompt_len, decode=kv_cache,
-               total_len=prompt_len + new_tokens)
-    rng = np.random.default_rng(0)
-    toks = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
+    sched = BatchScheduler(eng, max_inflight=g.inflight,
+                           max_total_len=prompt_len + new_tokens)
+    sched.warmup(prompt_lens=[prompt_len])
+    arrivals = poisson_arrivals(requests, arrival_rate, rng)
+    for i in range(requests):
+        sched.submit(prompts[i], new_tokens, arrival_round=arrivals[i])
     t0 = time.time()
-    out, stats = eng.run_generate(toks, new_tokens, kv_cache=kv_cache)
+    outs, stats = sched.run()
     dt = time.time() - t0
-    print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
-          f"({requests*new_tokens/dt:.1f} tok/s, "
-          f"{stats.per_token_s*1e3:.0f}ms/token), "
-          f"peak {stats.peak_bytes/2**20:.0f}MB, {stats.loads} shard loads")
-    return out, stats
+    print(f"served {stats.requests} reqs x {new_tokens} tokens in "
+          f"{stats.rounds} rounds / {dt:.2f}s "
+          f"({stats.tokens_per_s:.1f} tok/s aggregate), peak "
+          f"{stats.peak_bytes/2**20:.0f}MB "
+          f"(cache {stats.cache_bytes_peak/2**20:.1f}MB), "
+          f"{stats.loads} shard loads, "
+          f"max inflight seen {stats.max_inflight_seen}")
+    for rid, req in sorted(sched.done.items()):
+        print(f"  req{rid}: arrived r{req.arrival_round} admitted "
+              f"r{req.admitted_round} finished r{req.finished_round}")
+    return outs, stats
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2_base")
     ap.add_argument("--budget-mb", type=float, default=None)
-    ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--num-agents", type=int, default=None)
     ap.add_argument("--pin-window", type=int, default=None)
+    ap.add_argument("--max-inflight", type=int, default=4,
+                    help="concurrency cap; the planner may pick less "
+                    "under a tight budget")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrivals, requests per round "
+                    "(default: all at once)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper's per-token re-prefill engine (§V-B2)")
     ap.add_argument("--full", action="store_true")
@@ -104,7 +154,9 @@ def main():
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
         prompt_len=args.prompt_len, new_tokens=args.new_tokens,
         reduced=not args.full, num_agents=args.num_agents,
-        pin_window=args.pin_window, kv_cache=not args.no_kv_cache)
+        pin_window=args.pin_window, kv_cache=not args.no_kv_cache,
+        max_inflight=args.max_inflight, arrival_rate=args.arrival_rate,
+        seed=args.seed)
 
 
 if __name__ == "__main__":

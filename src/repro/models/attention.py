@@ -382,6 +382,11 @@ def _pallas_decode(q, k_cache, v_cache, valid):
     G-fold read amplification is the price of the kernel's HBM->VMEM
     streaming pipeline and only applies on this explicitly-requested path.
     Requires dhk == dhv (GQA; MLA's asymmetric latent head falls back).
+
+    Batched ragged decode rides through unchanged: the (B, S) ``valid``
+    mask is per ROW, so a stacked batch of requests at different cache
+    positions is one kernel call over BH query rows — exactly how the
+    continuous-batching scheduler amortises the cache stream.
     """
     from repro.kernels import ops
 
@@ -441,12 +446,27 @@ def flash_decode(q, k_cache, v_cache, valid, ctx: Optional[ShardingCtx],
 def cache_update(cache, new, pos, ctx: Optional[ShardingCtx]):
     """Write ``new`` (B, KV, dh) into ``cache`` (B, S, KV, dh) at index ``pos``.
 
+    ``pos`` may be a scalar (one write slot for the whole batch — the
+    single-request decode path) or a (B,) vector of RAGGED per-row slots:
+    the continuous-batching scheduler stacks requests whose sequences are
+    at different lengths, so each row writes its own cache slot.
+
     Sequence dim may be sharded over the model axis: each shard applies a
     masked write iff ``pos`` lands in its range (no cross-shard traffic).
     """
     if ctx is None:
-        return jax.lax.dynamic_update_slice_in_dim(
-            cache, new[:, None].astype(cache.dtype), pos, axis=1)
+        pos = jnp.asarray(pos)
+        if pos.ndim == 0:
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache, new[:, None].astype(cache.dtype), pos, axis=1)
+        row_write = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+                c, n[None], p, axis=0))
+        return row_write(cache, new.astype(cache.dtype), pos)
+    if jnp.ndim(pos):
+        raise NotImplementedError(
+            "ragged per-row cache positions are single-device only "
+            "(the seq-sharded serving cache keeps one slot per step)")
 
     bs, ax = ctx.batch_spec, ctx.model_axis
 
@@ -527,9 +547,13 @@ def gqa_mrope_prefill(params, x, cfg: ModelConfig, ctx, positions3, *,
 
 def gqa_decode(params, x, cfg: ModelConfig, ctx, cache, pos, *,
                mrope_positions3=None, attn_impl=None):
-    """x: (B,1,D); cache{k,v}: (B,S,KV,dh); pos: scalar -> (out, cache)."""
+    """x: (B,1,D); cache{k,v}: (B,S,KV,dh); pos: scalar or RAGGED (B,)
+    vector of per-row cache positions -> (out, cache)."""
     b = x.shape[0]
     kv, g, dh = cfg.n_kv_heads, cfg.q_heads_per_kv, cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = pos.reshape(b, 1) if pos.ndim else jnp.full((b, 1), pos,
+                                                        jnp.int32)
     q, k, v = _project_qkv(params, x, cfg)
     if mrope_positions3 is not None:
         q = common.apply_mrope(q, mrope_positions3, cfg.mrope_sections,
@@ -537,7 +561,6 @@ def gqa_decode(params, x, cfg: ModelConfig, ctx, cache, pos, *,
         k = common.apply_mrope(k, mrope_positions3, cfg.mrope_sections,
                                cfg.rope_theta)
     else:
-        pos_b = jnp.full((b, 1), pos, jnp.int32)
         q = common.apply_rope(q, pos_b, cfg.rope_theta)
         k = common.apply_rope(k, pos_b, cfg.rope_theta)
     s_cache = cache["k"].shape[1]
@@ -547,14 +570,14 @@ def gqa_decode(params, x, cfg: ModelConfig, ctx, cache, pos, *,
     idx = jnp.arange(s_cache)
     if cfg.sliding_window is not None and cfg.sliding_window < s_cache:
         # full-length cache, windowed mask (writes are positional)
-        valid = ((idx[None, :] <= pos)
-                 & (idx[None, :] > pos - cfg.sliding_window))
+        valid = ((idx[None, :] <= pos_b)
+                 & (idx[None, :] > pos_b - cfg.sliding_window))
     elif cfg.sliding_window is not None:
         # ring cache at window size: every written slot is a valid key
         # (keys carry absolute rope; softmax is permutation-invariant)
-        valid = idx[None, :] < jnp.minimum(pos + 1, s_cache)
+        valid = idx[None, :] < jnp.minimum(pos_b + 1, s_cache)
     else:
-        valid = idx[None, :] <= pos
+        valid = idx[None, :] <= pos_b
     valid = jnp.broadcast_to(valid, (b, s_cache))
     qh = q.reshape(b, kv, g, dh)
     out = flash_decode(qh, k_cache, v_cache, valid, ctx, impl=attn_impl)
@@ -656,7 +679,9 @@ def mla_decode(params, x, cfg: ModelConfig, ctx, cache, pos):
     qc = common.rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
     q_nope = (qc @ params["w_uq_nope"]).reshape(b, 1, h, dn)
     q_rope = (qc @ params["w_uq_rope"]).reshape(b, 1, h, dr)
-    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = pos.reshape(b, 1) if pos.ndim else jnp.full((b, 1), pos,
+                                                        jnp.int32)
     q_rope = common.apply_rope(q_rope, pos_b, cfg.rope_theta)
 
     # Absorb W_uk: q_abs[h] = q_nope[h] @ W_uk[h].T  -> latent space (dc)
@@ -679,7 +704,7 @@ def mla_decode(params, x, cfg: ModelConfig, ctx, cache, pos):
     k_eff = jnp.concatenate([c_cache, kr_cache], -1)[:, :, None]  # (B,S,1,·)
     v_eff = c_cache[:, :, None]                                   # (B,S,1,dc)
     idx = jnp.arange(s_cache)
-    valid = jnp.broadcast_to(idx[None] <= pos, (b, s_cache))
+    valid = jnp.broadcast_to(idx[None] <= pos_b, (b, s_cache))
     o_lat = flash_decode(q_eff[:, None], k_eff, v_eff, valid, ctx)  # (B,1,H,dc)
     # Un-absorb W_uv: out[h] = o_lat[h] @ W_uv[h]
     w_uv = params["w_uv"].reshape(dc, h, dv)

@@ -14,3 +14,8 @@ if str(TESTS) not in sys.path:
     sys.path.insert(0, str(TESTS))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property-test example counts are capped from the environment by
+# helpers/hypothesis_compat.py (HYPOTHESIS_MAX_EXAMPLES=<n>): explicit
+# @settings(max_examples=...) in the tests would override a hypothesis
+# profile, so CI's short budget has to clamp at the shim layer.

@@ -13,14 +13,23 @@ modules import ``given / settings / st`` from here instead:
 
 Only the strategy surface the suite uses is stubbed: ``integers``,
 ``floats``, ``sampled_from``, ``booleans``.
+
+``HYPOTHESIS_MAX_EXAMPLES=<n>`` caps every test's example count from the
+environment (CI's stress job sets it to stay inside the workflow time
+budget).  The cap has to live HERE, not in a hypothesis profile: our
+tests pass ``max_examples`` explicitly via ``@settings``, which takes
+precedence over any loaded profile — so the shim min()s the explicit
+value against the env cap before real hypothesis sees it.
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 
-N_EXAMPLES = 5
+_ENV_CAP = os.environ.get("HYPOTHESIS_MAX_EXAMPLES")
+N_EXAMPLES = min(5, int(_ENV_CAP)) if _ENV_CAP else 5
 
 
 class _Strategy:
@@ -55,10 +64,13 @@ def _fallback_given(**strats):
             for _ in range(N_EXAMPLES):
                 drawn = {k: s.draw(rnd) for k, s in strats.items()}
                 fn(*args, **drawn, **kwargs)
-        # hide the drawn params from pytest's fixture resolution: the
-        # wrapper fills them, they are not fixtures
+        # hide the drawn params from pytest's fixture resolution (the
+        # wrapper fills them) but KEEP the rest — like real hypothesis,
+        # non-strategy params are pytest fixtures
         del wrapper.__wrapped__
-        wrapper.__signature__ = inspect.Signature()
+        keep = [p for name, p in inspect.signature(fn).parameters.items()
+                if name not in strats]
+        wrapper.__signature__ = inspect.Signature(keep)
         return wrapper
     return deco
 
@@ -70,8 +82,17 @@ def _fallback_settings(**_kwargs):
 
 
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import given, strategies as st  # noqa: F401
+    from hypothesis import settings as _hyp_settings
     HAVE_HYPOTHESIS = True
+
+    if _ENV_CAP:
+        def settings(*args, **kwargs):
+            kwargs["max_examples"] = min(
+                kwargs.get("max_examples", int(_ENV_CAP)), int(_ENV_CAP))
+            return _hyp_settings(*args, **kwargs)
+    else:
+        settings = _hyp_settings
 except ImportError:
     HAVE_HYPOTHESIS = False
     given = _fallback_given

@@ -5,11 +5,11 @@ import pytest
 from helpers.hypothesis_compat import given, settings, st
 
 from repro.core.planner import (analytic_latency, analytic_peak, plan,
-                                simulate)
+                                plan_generate, simulate)
 
 
-def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes):
-    return {
+def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes, seq=None):
+    prof = {
         "num_layers": n,
         "layer_t_load": t_load,
         "layer_t_comp": t_comp,
@@ -22,6 +22,12 @@ def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes):
                 "bytes": layer_bytes, "t_load": t_load, "t_comp": t_comp}
                for i in range(n)]),
     }
+    if seq is not None:                  # generation-aware: decode timing
+        prof["seq"] = seq
+        for s in prof["shards"]:
+            if s["kind"] == "layer":
+                s["t_decode"] = t_comp / seq
+    return prof
 
 
 @settings(max_examples=40, deadline=None)
@@ -80,3 +86,82 @@ def test_analytic_model_trends():
     assert all(lats[i] >= lats[i + 1] for i in range(3))
     peaks = [analytic_peak(m, 10, 5) for m in (1, 2, 4, 8)]
     assert all(peaks[i] < peaks[i + 1] for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# batch dimension (continuous-batching serving tier)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 16), tl=st.floats(0.01, 0.1),
+       tc=st.floats(0.001, 0.02), cache=st.integers(1, 4),
+       b1_slots=st.integers(1, 4), b2_extra=st.integers(0, 6))
+def test_plan_generate_inflight_monotone_in_budget(n, tl, tc, cache,
+                                                   b1_slots, b2_extra):
+    """Larger budget => the chosen in-flight count never decreases, and
+    the simulated peak never exceeds the budget (the satellite property
+    of the capacity-first search)."""
+    prof = synth_profile(n, tl, tc, 10, 5, seq=32)
+    b1 = 5 + n * cache * b1_slots + 2 * 10
+    b2 = b1 + b2_extra * 10 + n * cache * b2_extra
+    entries = plan_generate(prof, [b1, b2], new_tokens=6,
+                            cache_bytes_per_layer=cache, max_inflight=4)
+    e1, e2 = entries
+    for e, budget in zip(entries, (b1, b2)):
+        if e.feasible:
+            assert e.predicted_peak_bytes <= budget
+            assert e.cache_bytes == n * cache * e.inflight
+    if e1.feasible:
+        assert e2.feasible
+        assert e2.inflight >= e1.inflight
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 16), tl=st.floats(0.01, 0.1),
+       tc=st.floats(0.001, 0.02), r_cap=st.integers(1, 6))
+def test_plan_generate_unbudgeted_batch_scales_throughput(n, tl, tc, r_cap):
+    """Without a budget the planner admits the full in-flight cap, and
+    aggregate throughput never falls as the cap rises (weight streams
+    amortise; compute scales at worst linearly)."""
+    prof = synth_profile(n, tl, tc, 10, 5, seq=32)
+    prev = None
+    for cap in range(1, r_cap + 1):
+        e = plan_generate(prof, [None], new_tokens=6,
+                          cache_bytes_per_layer=2, max_inflight=cap)[0]
+        assert e.feasible and e.inflight == cap
+        assert e.predicted_throughput_tps == pytest.approx(
+            e.inflight / e.predicted_per_token_s)
+        if prev is not None:
+            assert e.predicted_throughput_tps >= prev - 1e-9
+        prev = e.predicted_throughput_tps
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 16), m=st.integers(1, 4),
+       batch=st.integers(1, 6))
+def test_simulate_batch_scales_compute_not_loads(n, m, batch):
+    """The batch dimension multiplies Inference Agent compute but leaves
+    the weight stream untouched: latency grows at most linearly with
+    batch and never shrinks; peak is batch-independent (cache bytes are
+    charged separately by the caller)."""
+    prof = synth_profile(n, 0.05, 0.004, 10, 5, seq=32)
+    lat1, peak1 = simulate(prof, m, t_comp_key="t_decode")
+    latb, peakb = simulate(prof, m, t_comp_key="t_decode", batch=batch)
+    assert latb >= lat1 - 1e-12
+    assert latb <= batch * lat1 + 1e-9
+    assert peakb == peak1
+
+
+def test_plan_generate_default_matches_single_request():
+    """max_inflight=1 (the default) must reproduce the pre-batch
+    planner's choice exactly — serving is strictly additive."""
+    prof = synth_profile(12, 0.05, 0.004, 10, 5, seq=32)
+    budgets = [5 + 12 * 2 + k * 10 for k in (2, 4, 12)] + [None]
+    for a, b in zip(plan_generate(prof, budgets, new_tokens=8,
+                                  cache_bytes_per_layer=2),
+                    plan_generate(prof, budgets, new_tokens=8,
+                                  cache_bytes_per_layer=2, max_inflight=1)):
+        assert (a.num_agents, a.pin_window, a.predicted_latency_s,
+                a.predicted_peak_bytes, a.feasible) == \
+               (b.num_agents, b.pin_window, b.predicted_latency_s,
+                b.predicted_peak_bytes, b.feasible)
+        assert b.inflight == 1

@@ -1,0 +1,254 @@
+"""Continuous-batching scheduler: equivalence with sequential serving,
+admission control, amortisation, and the multi-request budget floor."""
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import BatchScheduler, Hermes, PipeloadEngine
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="module")
+def gpt2s(tmp_path_factory):
+    """Small-but-real GPT-2-geometry checkpoint on disk."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=4, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=512, vocab_size=1000, vocab_pad_to=8, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s"
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    partition_and_save(params, cfg, path)
+    return cfg, path
+
+
+def _mem(path, cfg):
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    return layer_b, other
+
+
+def _sequential(path, cfg, prompts, news):
+    outs = []
+    for p, n in zip(prompts, news):
+        eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+        out, _ = eng.run_generate(p[None], n, kv_cache=True)
+        outs.append(np.asarray(out)[0])
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# equivalence: batched rounds == K sequential KV-cache runs, token for token
+# ---------------------------------------------------------------------------
+def test_batched_equals_sequential_same_lengths(gpt2s):
+    cfg, path = gpt2s
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 1000, (12,)) for _ in range(3)]
+    news = [4, 4, 4]
+    refs = _sequential(path, cfg, prompts, news)
+
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    sched = BatchScheduler(eng, max_inflight=3, max_total_len=16)
+    rids = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    outs, stats = sched.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(outs[rid], ref)
+    assert stats.requests == 3 and stats.new_tokens == 12
+    assert stats.max_inflight_seen == 3
+
+
+def test_batched_equals_sequential_mixed_lengths(gpt2s):
+    """Ragged prompts/targets AND a padded cache longer than any
+    sequential run's: padding past a request's position is exactly masked
+    out, so tokens still match bit for bit."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(2)
+    lens, news = [8, 12, 10], [4, 3, 5]
+    prompts = [rng.integers(0, 1000, (s,)) for s in lens]
+    refs = _sequential(path, cfg, prompts, news)
+
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    sched = BatchScheduler(eng, max_inflight=3, max_total_len=20)
+    rids = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    outs, _ = sched.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(outs[rid], ref)
+
+
+def test_batched_equals_sequential_staggered_arrivals(gpt2s):
+    """Requests joining at later round boundaries (and retiring at
+    different rounds) decode the same tokens as isolated runs."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 1000, (10,)) for _ in range(3)]
+    news = [5, 3, 4]
+    refs = _sequential(path, cfg, prompts, news)
+
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    sched = BatchScheduler(eng, max_inflight=2, max_total_len=16)
+    rids = [sched.submit(p, n, arrival_round=a)
+            for p, n, a in zip(prompts, news, [0, 1, 3])]
+    outs, _ = sched.run()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(outs[rid], ref)
+
+
+# ---------------------------------------------------------------------------
+# amortisation + memory accounting
+# ---------------------------------------------------------------------------
+def test_weight_stream_amortised(gpt2s):
+    """4 concurrent requests must cost FEWER shard loads than 4
+    sequential runs — one streamed layer serves every in-flight request."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 1000, (8,)) for _ in range(4)]
+    news = [4] * 4
+
+    seq_loads = 0
+    for p, n in zip(prompts, news):
+        eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+        _, st = eng.run_generate(p[None], n, kv_cache=True)
+        seq_loads += st.loads
+
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    sched = BatchScheduler(eng, max_inflight=4, max_total_len=12)
+    for p, n in zip(prompts, news):
+        sched.submit(p, n)
+    _, stats = sched.run()
+    # 4 decode rounds + aux vs 4x that for sequential
+    assert stats.loads < seq_loads / 2
+    assert stats.rounds == 4
+
+
+def test_budget_respected_under_batching(gpt2s):
+    cfg, path = gpt2s
+    layer_b, other = _mem(path, cfg)
+    T = 12
+    per_req = cfg.num_layers * cfg.cache_bytes(1, T)
+    budget = other + 3 * per_req + 3 * layer_b
+    rng = np.random.default_rng(5)
+
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    sched = BatchScheduler(eng, max_inflight=3, max_total_len=T)
+    for _ in range(3):
+        sched.submit(rng.integers(0, 1000, (8,)), 4)
+    outs, stats = sched.run()
+    assert stats.peak_bytes <= budget
+    assert stats.requests == 3
+    assert stats.cache_bytes_peak == 3 * per_req
+
+
+def test_pinned_window_reduces_loads_in_serving(gpt2s):
+    cfg, path = gpt2s
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 1000, (8,)) for _ in range(2)]
+
+    def serve(pin):
+        eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                             pin_window=pin)
+        sched = BatchScheduler(eng, max_inflight=2, max_total_len=12)
+        for p in prompts:
+            sched.submit(p, 4)
+        return sched.run()
+
+    outs0, st0 = serve(0)
+    outs2, st2 = serve(2)
+    for rid in outs0:
+        np.testing.assert_array_equal(outs0[rid], outs2[rid])
+    assert st2.loads < st0.loads
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_admission_respects_max_inflight(gpt2s):
+    cfg, path = gpt2s
+    rng = np.random.default_rng(7)
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    sched = BatchScheduler(eng, max_inflight=2, max_total_len=12)
+    for _ in range(5):
+        sched.submit(rng.integers(0, 1000, (8,)), 3)
+    _, stats = sched.run()
+    assert stats.requests == 5
+    assert stats.max_inflight_seen <= 2
+
+
+def test_submit_rejects_impossible_requests(gpt2s):
+    cfg, path = gpt2s
+    layer_b, other = _mem(path, cfg)
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=other + layer_b)   # no room for cache
+    sched = BatchScheduler(eng, max_inflight=2, max_total_len=12)
+    with pytest.raises(ValueError, match="KV decode floor"):
+        sched.submit(np.arange(8), 2)
+    with pytest.raises(ValueError, match="max_total_len"):
+        BatchScheduler(PipeloadEngine(path, cfg, mode="pipeload"),
+                       max_inflight=2, max_total_len=8).submit(
+                           np.arange(8), 2)
+
+
+def test_scheduler_rejects_baseline_mode(gpt2s):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="baseline")
+    with pytest.raises(ValueError, match="pipelined mode"):
+        BatchScheduler(eng, max_inflight=2, max_total_len=12)
+
+
+# ---------------------------------------------------------------------------
+# multi-request _check_kv_budget (the generalized floor)
+# ---------------------------------------------------------------------------
+def test_check_kv_budget_multi_request_floor_and_message(gpt2s):
+    cfg, path = gpt2s
+    layer_b, other = _mem(path, cfg)
+    per_req = cfg.num_layers * cfg.cache_bytes(1, 12)
+    # fits ONE request's pages but not four
+    budget = other + per_req + layer_b
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    eng._check_kv_budget(per_req, inflight=1)        # fits: no raise
+    with pytest.raises(ValueError) as ei:
+        eng._check_kv_budget(4 * per_req, inflight=4)
+    msg = str(ei.value)
+    assert "KV decode floor" in msg
+    assert "4 in-flight request(s)" in msg
+    assert f"4 x {per_req}" in msg
+    # floor helper is exact: other + cache + one streaming layer (pin=0)
+    assert eng._kv_floor(4 * per_req) == other + 4 * per_req + layer_b
+
+
+def test_check_kv_budget_unbudgeted_is_noop(gpt2s):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    eng._check_kv_budget(10**12, inflight=64)        # no budget: no raise
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+def test_hermes_scheduler_facade(gpt2s):
+    cfg, path = gpt2s
+    h = Hermes(path, cfg)
+    h.profile(batch=1, seq=8, force=True)
+    layer_b, other = _mem(path, cfg)
+    per_req = cfg.num_layers * cfg.cache_bytes(1, 12)
+    budget = other + 2 * per_req + 3 * layer_b
+    sched = h.scheduler(budget_bytes=budget, max_inflight=4,
+                        prompt_len=8, new_tokens=4)
+    assert 1 <= sched.max_inflight <= 4
+    rng = np.random.default_rng(8)
+    for _ in range(3):
+        sched.submit(rng.integers(0, 1000, (8,)), 4)
+    _, stats = sched.run()
+    assert stats.requests == 3
+    assert stats.peak_bytes <= budget
+
+
+def test_hermes_scheduler_infeasible_raises(gpt2s):
+    cfg, path = gpt2s
+    h = Hermes(path, cfg)
+    h.profile(batch=1, seq=8, force=True)
+    with pytest.raises(ValueError, match="no feasible serving"):
+        h.scheduler(budget_bytes=1024, prompt_len=8, new_tokens=4)
