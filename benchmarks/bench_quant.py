@@ -1,0 +1,130 @@
+"""Beyond-paper: quantized weight streaming (int8/int4 PIPELOAD shards)
+vs. full precision on the GPT-2 KV-decode workload.
+
+Two memory regimes per dtype, everything else held fixed:
+
+  * ``roomy``  — one shared budget sized so even fp32 can pin the whole
+    stack.  The planner does exactly that for every dtype, so the
+    measured ledger peak IS each dtype's full-resident envelope and the
+    prefill round streams every shard once: the bytes-streamed and
+    peak-bytes columns are the ~4x (int8) / ~8x (int4) shard shrinkage,
+    measured end to end through the engine.
+  * ``tight``  — one shared budget a few fp32 layers above the fp32
+    decode floor.  fp32 must re-stream most of the stack every decode
+    round; int8/int4 pin everything inside the same budget and decode
+    from memory — the tokens/s column is the edge-regime win.
+
+Accuracy rides along: per-dtype last-token logits (vs. fp32) and greedy
+token agreement land in every row — the trade-off table in
+docs/quantization.md is generated from this output.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Hermes, PipeloadEngine
+from benchmarks.common import csv_line, emit, ensure_paper_ckpt, paper_cfg
+
+MODEL = "gpt2_base"
+PROMPT_LEN = 64
+NEW_TOKENS = 8
+AGENTS = 4
+DTYPES = ("fp32", "int8", "int4")
+
+
+def run():
+    cfg, full_layers = paper_cfg(MODEL)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (1, PROMPT_LEN))
+    total = PROMPT_LEN + NEW_TOKENS
+
+    ckpts = {d: ensure_paper_ckpt(MODEL, None if d == "fp32" else d)
+             for d in DTYPES}
+    hermes = {d: Hermes(ckpts[d], cfg) for d in DTYPES}
+    profiles = {d: hermes[d].profile(batch=1, seq=PROMPT_LEN)
+                for d in DTYPES}
+
+    # shared budgets, both sized off the fp32 profile (same budget for
+    # every dtype — the quantized runs just need less of it)
+    p32 = profiles["fp32"]
+    n, lb32, other32 = p32["num_layers"], p32["layer_bytes"], \
+        p32["other_bytes"]
+    cache_total = n * cfg.cache_bytes(1, total)
+    budgets = {
+        "roomy": other32 + cache_total + (n + 2) * lb32,
+        "tight": other32 + cache_total + 3 * lb32,
+    }
+
+    rows, lines = [], []
+    fp32_logits = None
+    fp32_tokens = {}
+
+    for dtype in DTYPES:
+        # one full forward for the accuracy columns (streams each shard
+        # once; unbudgeted so it never interferes with the timed runs)
+        eng = PipeloadEngine(ckpts[dtype], cfg, mode="pipeload",
+                             num_agents=AGENTS)
+        eng.warmup(1, PROMPT_LEN)
+        logits, _ = eng.run_single(toks)
+        logits = np.asarray(logits)
+        if dtype == "fp32":
+            fp32_logits = logits
+        logit_err = float(np.abs(logits - fp32_logits).max())
+        logit_rel = logit_err / float(np.abs(fp32_logits).max())
+        del eng
+
+        for regime, budget in budgets.items():
+            g = hermes[dtype].plan_generate(
+                [budget], batch=1, prompt_len=PROMPT_LEN,
+                new_tokens=NEW_TOKENS, max_agents=AGENTS)[0]
+            eng = PipeloadEngine(
+                ckpts[dtype], cfg, mode="pipeload",
+                num_agents=g.num_agents, pin_window=g.pin_window,
+                budget_bytes=budget if g.feasible else None)
+            eng.warmup(1, PROMPT_LEN, decode=True, total_len=total)
+            out, stats = eng.run_generate(toks, NEW_TOKENS, kv_cache=True)
+            out = np.asarray(out)[:, PROMPT_LEN:]
+            if dtype == "fp32":
+                fp32_tokens[regime] = out
+            agree = float((out == fp32_tokens[regime]).mean())
+            rows.append({
+                "model": MODEL, "depth_frac": cfg.num_layers / full_layers,
+                "prompt_len": PROMPT_LEN, "new_tokens": NEW_TOKENS,
+                "dtype": dtype, "regime": regime,
+                "budget_bytes": budget, "feasible": g.feasible,
+                "num_agents": g.num_agents, "pin_window": g.pin_window,
+                "latency_s": stats.latency_s,
+                "per_token_s": stats.per_token_s,
+                "prefill_s": stats.prefill_s, "decode_s": stats.decode_s,
+                "peak_bytes": stats.peak_bytes,
+                "streamed_bytes": stats.streamed_bytes,
+                "cache_bytes": stats.cache_bytes, "loads": stats.loads,
+                "within_budget": stats.peak_bytes <= budget,
+                "planner_peak_bytes": g.predicted_peak_bytes,
+                "logit_max_abs_err_vs_fp32": logit_err,
+                "logit_max_rel_err_vs_fp32": logit_rel,
+                "token_agreement_vs_fp32": agree,
+            })
+            del eng
+
+    emit(rows, "quant")
+
+    def row(dtype, regime):
+        return next(r for r in rows
+                    if r["dtype"] == dtype and r["regime"] == regime)
+
+    base_roomy, base_tight = row("fp32", "roomy"), row("fp32", "tight")
+    for dtype in DTYPES:
+        roomy, tight = row(dtype, "roomy"), row(dtype, "tight")
+        lines.append(csv_line(
+            f"quant[{dtype}]", tight["per_token_s"] * 1e6,
+            f"streamed_reduction_x="
+            f"{base_roomy['streamed_bytes'] / roomy['streamed_bytes']:.2f},"
+            f"peak_reduction_x="
+            f"{base_roomy['peak_bytes'] / roomy['peak_bytes']:.2f},"
+            f"tight_tok_s={1.0 / tight['per_token_s']:.1f}"
+            f"_vs_{1.0 / base_tight['per_token_s']:.1f}_fp32,"
+            f"within_budget={tight['within_budget']},"
+            f"logit_rel_err={tight['logit_max_rel_err_vs_fp32']:.3f},"
+            f"tok_agree={tight['token_agreement_vs_fp32']:.2f}"))
+    return lines

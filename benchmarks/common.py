@@ -8,7 +8,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.checkpoint import load_manifest, partition_and_save
+from repro.checkpoint import (ensure_quantized, load_manifest,
+                              partition_and_save)
 from repro.configs import get_config
 from repro.models.api import build_model
 
@@ -36,7 +37,7 @@ def paper_cfg(name: str):
     return cfg, full_layers
 
 
-def ensure_paper_ckpt(name: str) -> Path:
+def ensure_paper_ckpt(name: str, quant: str | None = None) -> Path:
     cfg, _ = paper_cfg(name)
     path = CKPT_ROOT / name
     if not (path / "manifest.json").exists():
@@ -44,6 +45,8 @@ def ensure_paper_ckpt(name: str) -> Path:
         params = api.init(jax.random.PRNGKey(0))
         partition_and_save(params, cfg, path)
         del params
+    if quant:
+        return ensure_quantized(path, CKPT_ROOT / f"{name}-{quant}", quant)
     return path
 
 

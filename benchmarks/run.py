@@ -20,6 +20,7 @@ BENCHES = {
     "fig7": "benchmarks.bench_fig7_constraints",
     "decode": "benchmarks.bench_decode",
     "batch_decode": "benchmarks.bench_batch_decode",
+    "quant": "benchmarks.bench_quant",
     "roofline": "benchmarks.bench_roofline",
     "kernels": "benchmarks.bench_kernels",
 }

@@ -22,6 +22,9 @@ def main():
     ap.add_argument("--arch", default="gpt2_base")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant (fast)")
+    ap.add_argument("--quant", action="store_true",
+                    help="search shard dtype (fp32/int8/int4) jointly "
+                    "with the schedule")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,10 +39,12 @@ def main():
     prof = h.profile()
     lb, other = prof["layer_bytes"], prof["other_bytes"]
     budgets = [other + k * lb for k in (2, 3, 4, 6, 8, 12)] + [None]
-    print(f"{'budget':>12} {'agents':>7} {'pred latency':>13} {'pred peak':>10}")
-    for b, e in zip(budgets, h.plan(budgets)):
+    quants = ("fp32", "int8", "int4") if args.quant else None
+    print(f"{'budget':>12} {'agents':>7} {'dtype':>6} "
+          f"{'pred latency':>13} {'pred peak':>10}")
+    for b, e in zip(budgets, h.plan(budgets, quants=quants)):
         bs = "unlimited" if b is None else f"{b/2**20:.0f}MB"
-        print(f"{bs:>12} {e.num_agents:>7} "
+        print(f"{bs:>12} {e.num_agents:>7} {e.dtype or 'fp32':>6} "
               f"{e.predicted_latency_s*1e3:>10.1f}ms "
               f"{e.predicted_peak_bytes/2**20:>8.1f}MB")
 

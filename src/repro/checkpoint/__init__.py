@@ -1,2 +1,5 @@
 from repro.checkpoint.partition import (  # noqa: F401
-    load_manifest, load_shard, partition_and_save, shard_names)
+    ensure_quantized, load_manifest, load_shard, partition_and_save,
+    requantize, shard_names)
+from repro.checkpoint.quant import (  # noqa: F401
+    QUANT_SCHEMES, QuantizedTensor, dequant_tree, quantize_array)

@@ -7,19 +7,30 @@ A model checkpoint is pre-processed into per-layer shards on disk:
     <dir>/layer_000.npz ...  # encoder/decoder layers (the 70-95% bulk)
     <dir>/head.npz           # final norm + lm/classifier head
 
-Each shard is an .npz of named arrays; the manifest records byte sizes and
-kinds so the Pipeline Planner can reason about the schedule without opening
-shards.  Loading a shard is a real disk read (np.load with regular I/O).
+Each shard is an .npz of named arrays; the manifest records byte sizes,
+kinds and per-shard dtype/scale metadata so the Pipeline Planner can
+reason about the schedule without opening shards.  Loading a shard is a
+real disk read (np.load with regular I/O).
+
+``quant="int8" | "int4"`` writes per-channel-scaled integer shards
+(``checkpoint/quant.py``): 2-D matmul weights are stored as integer
+payload + f32 scales, 1-D params keep the checkpoint dtype, and every
+manifest ``bytes`` figure is the *quantized* size — so the planner, the
+engine's ledger and the KV decode floor all shrink by ~4x (int8) / ~8x
+(int4) without opening a shard.  ``load_shard`` restores quantized
+arrays as ``QuantizedTensor`` pytree leaves; dequantization happens
+inside the jitted module fns (core/modules.py).
 """
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.checkpoint import quant as qz
 from repro.models.config import ModelConfig
 
 
@@ -44,8 +55,31 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> dict:
     return tree
 
 
-def partition_and_save(params: dict, cfg: ModelConfig, path) -> dict:
-    """Split a dense-family param tree (stacked layers) into shards."""
+def _save_shard(path: Path, name: str, flat: Dict[str, np.ndarray],
+                kind: str, index: int, quant: Optional[str],
+                base_dtype: str) -> dict:
+    """Write one (possibly quantized) shard and return its manifest row."""
+    fp_bytes = int(sum(a.nbytes for a in flat.values()))
+    stored = qz.quantize_flat(flat, quant)
+    np.savez(path / f"{name}.npz", **stored)
+    nbytes = int(sum(np.asarray(a).nbytes for a in stored.values()))
+    row = {"name": name, "kind": kind, "index": index, "bytes": nbytes,
+           "dtype": quant or base_dtype}
+    if quant:
+        row["fp_bytes"] = fp_bytes
+        row["scale_bytes"] = int(sum(
+            np.asarray(a).nbytes for k, a in stored.items()
+            if k.endswith(".__scale__")))
+        row["n_quantized"] = sum(1 for k in stored if k.endswith(".__q__"))
+    return row
+
+
+def partition_and_save(params: dict, cfg: ModelConfig, path, *,
+                       quant: Optional[str] = None) -> dict:
+    """Split a dense-family param tree (stacked layers) into shards.
+
+    ``quant`` in {None, "int8", "int4"} selects the shard precision."""
+    assert quant is None or quant in qz.QUANT_SCHEMES, quant
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
     params = jax.tree.map(np.asarray, params)
@@ -53,11 +87,8 @@ def partition_and_save(params: dict, cfg: ModelConfig, path) -> dict:
     shards: List[dict] = []
 
     def save(name: str, tree: dict, kind: str, index: int = -1):
-        flat = _flatten(tree)
-        np.savez(path / f"{name}.npz", **flat)
-        nbytes = int(sum(a.nbytes for a in flat.values()))
-        shards.append({"name": name, "kind": kind, "index": index,
-                       "bytes": nbytes})
+        shards.append(_save_shard(path, name, _flatten(tree), kind, index,
+                                  quant, cfg.dtype))
 
     embed_tree = {"embed": params["embed"]}
     if "patch_proj" in params:
@@ -74,17 +105,73 @@ def partition_and_save(params: dict, cfg: ModelConfig, path) -> dict:
         head_tree["lm_head"] = params["lm_head"]
     save("head", head_tree, "head")
 
+    manifest = _build_manifest(cfg.name, cfg.num_layers, cfg.dtype, shards,
+                               quant)
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def _build_manifest(model: str, num_layers: int, dtype: str,
+                    shards: List[dict], quant: Optional[str]) -> dict:
     manifest = {
-        "model": cfg.name,
-        "num_layers": cfg.num_layers,
-        "dtype": cfg.dtype,
+        "model": model,
+        "num_layers": num_layers,
+        "dtype": dtype,
+        "quant": quant,
         "shards": shards,
         "total_bytes": int(sum(s["bytes"] for s in shards)),
         "layer_bytes": int(sum(s["bytes"] for s in shards
                                if s["kind"] == "layer")),
     }
-    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if quant:
+        manifest["quant_scheme"] = qz.SCHEME
+        manifest["quant_bits"] = qz.QUANT_SCHEMES[quant][0]
     return manifest
+
+
+def requantize(src, dst, quant: str) -> dict:
+    """Re-write a full-precision partitioned checkpoint as quantized
+    shards — no model init needed, shards are transcoded one at a time
+    (peak host memory = one shard).  The manifest records the source's
+    byte total so ``ensure_quantized`` can detect a stale transcode."""
+    assert quant in qz.QUANT_SCHEMES, quant
+    src, dst = Path(src), Path(dst)
+    src_man = load_manifest(src)
+    if src_man.get("quant"):
+        raise ValueError(
+            f"requantize needs a full-precision source checkpoint; "
+            f"{src} is already {src_man['quant']}")
+    dst.mkdir(parents=True, exist_ok=True)
+    shards = []
+    for s in src_man["shards"]:
+        with np.load(src / f"{s['name']}.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        shards.append(_save_shard(dst, s["name"], flat, s["kind"],
+                                  s["index"], quant, src_man["dtype"]))
+    manifest = _build_manifest(src_man["model"], src_man["num_layers"],
+                               src_man["dtype"], shards, quant)
+    manifest["source_total_bytes"] = src_man["total_bytes"]
+    (dst / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def ensure_quantized(src, dst, quant: str) -> Path:
+    """Transcode ``src`` into quantized shards at ``dst`` unless a
+    CURRENT transcode already sits there.  "Current" means the existing
+    manifest carries the right ``quant`` tag and the source fingerprint
+    (its manifest byte total) — without the check, re-partitioning the
+    source in place would leave derived int8/int4 shards silently
+    serving the *old* weights."""
+    src, dst = Path(src), Path(dst)
+    if (dst / "manifest.json").exists():
+        dst_man = load_manifest(dst)
+        src_man = load_manifest(src)
+        if (dst_man.get("quant") == quant
+                and dst_man.get("source_total_bytes")
+                == src_man["total_bytes"]):
+            return dst
+    requantize(src, dst, quant)
+    return dst
 
 
 def load_manifest(path) -> dict:
@@ -96,7 +183,8 @@ def shard_names(manifest: dict) -> List[str]:
 
 
 def load_shard(path, name: str) -> dict:
-    """Real disk read -> nested dict of np arrays."""
+    """Real disk read -> nested dict of np arrays (quantized entries come
+    back as QuantizedTensor leaves)."""
     with np.load(Path(path) / f"{name}.npz") as z:
         flat = {k: z[k] for k in z.files}   # forces the read
-    return _unflatten(flat)
+    return qz.restore_tree(_unflatten(flat))

@@ -39,6 +39,15 @@ Multi-request serving amortises the weight stream further:
 applies each streamed layer to EVERY in-flight request (stacked decode
 states with ragged positions + joining prefills) before destroying it —
 the continuous-batching scheduler (core/scheduler.py) drives it.
+
+Quantized checkpoints (int8/int4 shards, checkpoint/quant.py) flow
+through unchanged: ``load_shard`` hands back ``QuantizedTensor`` leaves,
+the manifest ``bytes`` every ledger acquire/release uses are the
+*quantized* sizes (so ``S_stop`` gates, the KV decode floor and the
+batch-round admission maths all shrink with the shards), and the module
+fns dequantize in-jit at compute time.  The per-layer fp copy is a
+transient XLA temporary — like activations, it is not a resident tier
+the ledger tracks.
 """
 from __future__ import annotations
 
@@ -67,6 +76,7 @@ class RunStats:
     peak_bytes: int
     events: List[Tuple[float, str, str]]
     loads: int = 0
+    streamed_bytes: int = 0   # disk bytes read (quantized shards shrink it)
     # generation extras (0 for single-pass runs)
     new_tokens: int = 0
     prefill_s: float = 0.0
@@ -164,6 +174,12 @@ class PipeloadEngine:
         y = self.fns["layer"](weights, x)
         y.block_until_ready()
         return y
+
+    def _streamed(self, events) -> int:
+        """Total shard bytes read from disk this run (manifest sizes, so
+        quantized checkpoints stream ~4x/8x fewer bytes per load)."""
+        return sum(self.shards[e[2]]["bytes"] for e in events
+                   if e[1] == "load_end")
 
     # ------------------------------------------------------------------
     def _run_pipeline(self, x, ledger: _Ledger, events, t0,
@@ -365,7 +381,8 @@ class PipeloadEngine:
         lat = time.perf_counter() - t0
         return logits, RunStats(self.mode, self.m, lat, ledger.peak, events,
                                 loads=sum(1 for e in events
-                                          if e[1] == "load_end"))
+                                          if e[1] == "load_end"),
+                                streamed_bytes=self._streamed(events))
 
     def run_generate(self, tokens, new_tokens: int, *,
                      kv_cache: bool = False
@@ -402,6 +419,7 @@ class PipeloadEngine:
         return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
                               loads=sum(1 for e in events
                                         if e[1] == "load_end"),
+                              streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s)
 
@@ -502,6 +520,7 @@ class PipeloadEngine:
         return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
                               loads=sum(1 for e in events
                                         if e[1] == "load_end"),
+                              streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
                               cache_bytes=cache_total, kv_cache=True)

@@ -11,16 +11,27 @@ Generation workloads get the generation-aware tier:
     gplan = hermes.plan_generate([b1], prompt_len=128, new_tokens=32)[0]
     stats = hermes.execute(tokens, generate=32, kv_cache=True,
                            budget_bytes=b1)     # picks (m, pin) jointly
+
+Quantized weight streaming threads through the same facade:
+
+    h8 = hermes.quantized("int8")      # sibling int8 checkpoint (cached)
+    g = hermes.plan_generate([b1], quants=("fp32", "int8", "int4"),
+                             prompt_len=128, new_tokens=32)[0]
+    engine = hermes.quantized(g.dtype).engine(...)   # g.dtype = winner
 """
 from __future__ import annotations
 
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
+from repro.checkpoint.partition import ensure_quantized
 from repro.core.engine import PipeloadEngine, RunStats
 from repro.core.planner import GenPlanEntry, PlanEntry, plan, plan_generate
 from repro.core.profiler import load_profile, profile_model, save_profile
 from repro.models.config import ModelConfig
+
+# planner label for "no quantization: stream shards at the ckpt dtype"
+FP_LABEL = "fp32"
 
 
 class Hermes:
@@ -28,6 +39,7 @@ class Hermes:
         self.dir = Path(ckpt_dir)
         self.cfg = cfg
         self._profile: Optional[Dict] = None
+        self._variants: Dict[str, "Hermes"] = {}
 
     # ---- Layer Profiler ------------------------------------------------
     def profile(self, *, batch: int = 1, seq: int = 128,
@@ -43,10 +55,39 @@ class Hermes:
         save_profile(self._profile, cache)
         return self._profile
 
+    # ---- Quantized checkpoint variants ---------------------------------
+    def quantized(self, quant: Optional[str]) -> "Hermes":
+        """Hermes over the ``quant`` variant of this checkpoint.  The
+        sibling directory ``<dir>-<quant>`` is transcoded once (no model
+        init) and reused — including its own cached profile.json — and
+        re-transcoded automatically if the source checkpoint changed
+        underneath it (``checkpoint.ensure_quantized``)."""
+        if quant in (None, FP_LABEL):
+            return self
+        if quant not in self._variants:
+            dst = self.dir.parent / f"{self.dir.name}-{quant}"
+            ensure_quantized(self.dir, dst, quant)
+            self._variants[quant] = Hermes(dst, self.cfg)
+        return self._variants[quant]
+
+    def _quant_profiles(self, quants: Sequence[Optional[str]],
+                        **profile_kw) -> Dict[str, Dict]:
+        """One Layer Profiler run per requested shard dtype."""
+        labels = [q or FP_LABEL for q in quants]
+        return {lb: self.quantized(lb).profile(**profile_kw)
+                for lb in labels}
+
     # ---- Pipeline Planner ----------------------------------------------
     def plan(self, budgets: List[Optional[int]],
-             max_agents: Optional[int] = None) -> List[PlanEntry]:
-        return plan(self.profile(), budgets, max_agents)
+             max_agents: Optional[int] = None,
+             quants: Optional[Sequence[Optional[str]]] = None
+             ) -> List[PlanEntry]:
+        """Schedule per budget; ``quants`` (e.g. ``("fp32", "int8")``)
+        widens the search over shard dtype — the winning entry's
+        ``dtype`` says which variant to execute."""
+        prof = (self.profile() if quants is None
+                else self._quant_profiles(quants))
+        return plan(prof, budgets, max_agents)
 
     def best_agents(self, budget_bytes: Optional[int]) -> int:
         return self.plan([budget_bytes])[0].num_agents
@@ -56,13 +97,19 @@ class Hermes:
                       new_tokens: int = 32,
                       max_agents: Optional[int] = None,
                       max_pin: Optional[int] = None,
-                      max_inflight: int = 1) -> List[GenPlanEntry]:
+                      max_inflight: int = 1,
+                      quants: Optional[Sequence[Optional[str]]] = None
+                      ) -> List[GenPlanEntry]:
         """Generation-aware schedule: joint (num_agents, pin_window) with
         KV-cache bytes charged against the budget.  ``max_inflight > 1``
         additionally searches the continuous-batching in-flight count
-        (capacity-first; see ``planner.plan_generate``)."""
+        (capacity-first; see ``planner.plan_generate``); ``quants``
+        widens the search over shard dtype (KV pages keep the model
+        dtype, so ``cache_bytes_per_layer`` is shared)."""
         cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
-        return plan_generate(self.profile(), budgets, new_tokens=new_tokens,
+        prof = (self.profile() if quants is None
+                else self._quant_profiles(quants, batch=1, seq=prompt_len))
+        return plan_generate(prof, budgets, new_tokens=new_tokens,
                              cache_bytes_per_layer=cb, max_agents=max_agents,
                              max_pin=max_pin, max_inflight=max_inflight)
 
@@ -83,17 +130,21 @@ class Hermes:
                   new_tokens: int = 32,
                   num_agents: Optional[int] = None,
                   pin_window: Optional[int] = None,
-                  max_total_len: Optional[int] = None) -> "BatchScheduler":
+                  max_total_len: Optional[int] = None,
+                  quants: Optional[Sequence[Optional[str]]] = None
+                  ) -> "BatchScheduler":
         """Continuous-batching serving facade: plan the
         (num_agents, pin_window, inflight) triple for the budget, build
         the engine, and wrap it in a ``BatchScheduler`` ready for
         ``submit()``/``run()``.  ``prompt_len``/``new_tokens`` describe
         the TYPICAL request (they size the padded cache reservation);
-        per-request lengths may vary below ``max_total_len``."""
+        per-request lengths may vary below ``max_total_len``.
+        ``quants`` widens the plan over shard dtype; the engine is built
+        on the winning checkpoint variant."""
         from repro.core.scheduler import BatchScheduler
         g = self.plan_generate([budget_bytes], prompt_len=prompt_len,
                                new_tokens=new_tokens,
-                               max_inflight=max_inflight)[0]
+                               max_inflight=max_inflight, quants=quants)[0]
         if not g.feasible:
             raise ValueError(
                 f"no feasible serving schedule for budget {budget_bytes}: "
@@ -101,7 +152,8 @@ class Hermes:
                 f"bytes ({g.cache_bytes} of KV cache at inflight="
                 f"{g.inflight}); raise the budget or shrink "
                 f"prompt/new_tokens")
-        eng = self.engine(mode="pipeload", budget_bytes=budget_bytes,
+        host = self.quantized(g.dtype) if quants is not None else self
+        eng = host.engine(mode="pipeload", budget_bytes=budget_bytes,
                           num_agents=(num_agents if num_agents is not None
                                       else g.num_agents),
                           pin_window=(pin_window if pin_window is not None

@@ -13,6 +13,15 @@ The engine operates at shard granularity: ``embed`` -> N x ``layer`` ->
     attention can run through the Pallas flash-decoding kernel
     (``attn_impl="pallas"``, kernels/flash_decode.py) — "auto" picks it on
     TPU, the jnp online softmax elsewhere.
+
+Quantized checkpoints (``partition_and_save(..., quant="int8"|"int4")``)
+arrive as weight trees whose 2-D matmul weights are ``QuantizedTensor``
+leaves.  Every module fn dequantizes those leaves *inside* its jit — the
+resident form the engine's ledger accounts stays quantized, and the fp
+copy of (at most) the layer currently computing is a transient XLA
+temporary, destroyed with the computation.  The embedding fn takes the
+gather-then-scale fast path so the fp table is never materialised for
+int8.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import quant as qz
 from repro.models import common
 from repro.models.dense_lm import layer_decode, layer_prefill
 from repro.models.config import ModelConfig
@@ -51,10 +61,14 @@ def build_module_fns(cfg: ModelConfig,
 
     @jax.jit
     def embed_apply(weights, tokens):
-        return weights["embed"][tokens]
+        emb = weights["embed"]
+        if qz.is_quantized(emb):
+            return emb.take_rows(tokens)
+        return emb[tokens]
 
     @jax.jit
     def layer_apply(weights, x):
+        weights = qz.dequant_tree(weights)
         b, s, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         out, _, _ = layer_prefill(weights, x, cfg, None, positions,
@@ -65,6 +79,7 @@ def build_module_fns(cfg: ModelConfig,
     def layer_cache_apply(weights, x, total_len: int):
         """Prefill one layer AND capture its KV cache, padded to
         ``total_len`` slots so decode steps write in place."""
+        weights = qz.dequant_tree(weights)
         b, s, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         out, cache, _ = layer_prefill(weights, x, cfg, None, positions,
@@ -81,12 +96,14 @@ def build_module_fns(cfg: ModelConfig,
         continuous-batching scheduler).  Traced either way: no per-step
         recompile, and batched rounds reuse one executable per batch
         size."""
+        weights = qz.dequant_tree(weights)
         out, new_cache = layer_decode(weights, x, cfg, None, cache, pos,
                                       attn_impl=impl)
         return out, new_cache
 
     @jax.jit
     def head_apply(weights, x):
+        weights = qz.dequant_tree(weights)
         h = common.rms_norm(x, weights["final_norm"], cfg.norm_eps)
         if "lm_head" in weights:
             return (h[:, -1] @ weights["lm_head"]).astype(jnp.float32)

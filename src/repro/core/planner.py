@@ -22,6 +22,19 @@ decode round).  With ``max_inflight > 1`` it also searches the
 continuous-batching dimension: KV pages scale with the in-flight count
 while the weight stream does not, so the optimal
 ``(num_agents, pin_window, inflight)`` triple changes with the budget.
+
+Both ``plan`` and ``plan_generate`` also search over shard *dtype*: pass
+``{"fp32": profile, "int8": profile, ...}`` (one Layer Profiler run per
+quantized variant of the checkpoint — per-dtype ``t_load``/``bytes`` are
+measured, not modelled) and every candidate grid is the union across
+dtypes; the chosen entry's ``dtype`` field names the winner.  Quantized
+shards carry ~4x/8x fewer bytes, so under tight budgets they admit more
+loading agents, deeper pin windows and more in-flight requests — the
+capacity-first search surfaces exactly that.  KV-cache pages keep the
+model dtype (only weights are quantized), so ``cache_bytes_per_layer``
+is dtype-independent.  Accuracy is the user's trade-off, not the
+planner's: it never discounts a dtype for quantization error (see
+docs/quantization.md for the measured tolerances).
 """
 from __future__ import annotations
 
@@ -39,6 +52,7 @@ class PlanEntry:
     predicted_latency_s: float
     predicted_peak_bytes: int
     feasible: bool
+    dtype: Optional[str] = None       # shard dtype when searching over quant
 
 
 @dataclasses.dataclass
@@ -57,6 +71,7 @@ class GenPlanEntry:
     feasible: bool
     inflight: int = 1                 # concurrent requests in the batch
     predicted_throughput_tps: float = 0.0  # inflight tokens / decode round
+    dtype: Optional[str] = None       # shard dtype when searching over quant
 
 
 # ---------------------------------------------------------------------------
@@ -207,33 +222,73 @@ def simulate(profile: Dict, m: int,
 # ---------------------------------------------------------------------------
 # Planner
 # ---------------------------------------------------------------------------
-def plan(profile: Dict, budgets: List[Optional[int]],
+def _as_profiles(profile) -> List[Tuple[Optional[str], Dict]]:
+    """Normalise the planner input: a single Layer Profiler output, or a
+    ``{dtype_label: profile}`` dict to search shard dtype jointly."""
+    if isinstance(profile, dict) and "shards" not in profile:
+        return list(profile.items())
+    return [(profile.get("quant"), profile)]
+
+
+def _better(cand, best) -> bool:
+    """Feasible beats infeasible; ties break on predicted latency."""
+    return best is None or (cand.feasible and not best.feasible) or (
+        cand.feasible == best.feasible
+        and cand.predicted_latency_s < best.predicted_latency_s)
+
+
+def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
+                ) -> bool:
+    """Generation-tier comparator: feasibility, then latency — but a
+    LATENCY TIE goes to the deeper pin window.  When loads overlap
+    compute completely (fast disk, warm page cache) the simulator
+    predicts identical round latency for every pin that hides the first
+    load, yet each unpinned layer still costs a real disk read per
+    decode round; the simulator's objective is blind to that traffic, so
+    the tie-break is where "stream as few bytes as possible" lives."""
+    if best is None:
+        return True
+    if cand.feasible != best.feasible:
+        return cand.feasible
+    a, b = cand.predicted_latency_s, best.predicted_latency_s
+    if not (math.isfinite(a) and math.isfinite(b)):
+        return a < b
+    tol = 1e-6 * max(a, b, 1e-12)
+    if abs(a - b) > tol:
+        return a < b
+    return cand.pin_window > best.pin_window
+
+
+def plan(profile, budgets: List[Optional[int]],
          max_agents: Optional[int] = None) -> List[PlanEntry]:
-    n = profile["num_layers"]
-    t_load = profile["layer_t_load"]
-    t_comp = profile["layer_t_comp"]
-    lb = profile["layer_bytes"]
-    other = profile["other_bytes"]
-    max_m = max_agents or min(n, 12)
+    """Single-pass schedule per budget.  ``profile`` may be one Layer
+    Profiler output or ``{dtype: profile}`` (candidates union over
+    dtypes; the winning entry's ``dtype`` names the shard precision)."""
+    profiles = _as_profiles(profile)
 
     entries: List[PlanEntry] = []
     for budget in budgets:
         best: Optional[PlanEntry] = None
-        # tier 1: feasible range
-        feasible_ms = [m for m in range(1, max_m + 1)
-                       if budget is None
-                       or analytic_peak(m, lb, other) <= budget]
-        if not feasible_ms:
-            feasible_ms = [1]
-        # tier 2: exact pre-run on the feasible range
-        for m in feasible_ms:
-            lat, peak = simulate(profile, m, budget)
-            ok = math.isfinite(lat) and (budget is None or peak <= budget)
-            cand = PlanEntry(budget, m, lat, int(peak), ok)
-            if best is None or (cand.feasible and not best.feasible) or (
-                    cand.feasible == best.feasible
-                    and cand.predicted_latency_s < best.predicted_latency_s):
-                best = cand
+        for label, prof in profiles:
+            n = prof["num_layers"]
+            lb = prof["layer_bytes"]
+            other = prof["other_bytes"]
+            max_m = max_agents or min(n, 12)
+            # tier 1: feasible range
+            feasible_ms = [m for m in range(1, max_m + 1)
+                           if budget is None
+                           or analytic_peak(m, lb, other) <= budget]
+            if not feasible_ms:
+                feasible_ms = [1]
+            # tier 2: exact pre-run on the feasible range
+            for m in feasible_ms:
+                lat, peak = simulate(prof, m, budget)
+                ok = math.isfinite(lat) and (budget is None
+                                             or peak <= budget)
+                cand = PlanEntry(budget, m, lat, int(peak), ok,
+                                 dtype=label)
+                if _better(cand, best):
+                    best = cand
         entries.append(best)
     return entries
 
@@ -255,13 +310,14 @@ def _with_decode_times(profile: Dict) -> Dict:
     return prof
 
 
-def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
+def plan_generate(profile, budgets: List[Optional[int]], *,
                   new_tokens: int, cache_bytes_per_layer: int,
                   max_agents: Optional[int] = None,
                   max_pin: Optional[int] = None,
                   max_inflight: int = 1) -> List[GenPlanEntry]:
     """Joint (num_agents, pin_window, inflight) schedule for KV-cache
-    generation and continuous-batching serving.
+    generation and continuous-batching serving — over one profile, or
+    ``{dtype: profile}`` to search shard dtype jointly (module docs).
 
     Total latency model: one cache-capturing prefill round (full-sequence
     compute, every layer loaded) + ``new_tokens - 1`` decode rounds
@@ -283,16 +339,17 @@ def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
     shrinks ``inflight``, because feasibility of a count only ever grows
     with budget.
     """
-    prof = _with_decode_times(profile)
-    n = prof["num_layers"]
-    lb = prof["layer_bytes"]
-    other = prof["other_bytes"]
-    max_m = max_agents or min(n, 12)
-    pin_cap = n if max_pin is None else min(max_pin, n)
+    profiles = [(label, _with_decode_times(p))
+                for label, p in _as_profiles(profile)]
     rounds = max(new_tokens - 1, 0)
 
-    def best_at(budget, r: int) -> Optional[GenPlanEntry]:
+    def best_at(label, prof, budget, r: int) -> Optional[GenPlanEntry]:
         """Best (m, pin) candidate with ``r`` requests in flight."""
+        n = prof["num_layers"]
+        lb = prof["layer_bytes"]
+        other = prof["other_bytes"]
+        max_m = max_agents or min(n, 12)
+        pin_cap = n if max_pin is None else min(max_pin, n)
         cache_total = n * cache_bytes_per_layer * r
         best: Optional[GenPlanEntry] = None
         for pin in range(pin_cap + 1):
@@ -323,11 +380,9 @@ def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
                 cand = GenPlanEntry(budget, m, pin, total, pre_lat, dec_lat,
                                     int(peak), cache_total, ok,
                                     inflight=r,
-                                    predicted_throughput_tps=tput)
-                if best is None or (cand.feasible and not best.feasible) or (
-                        cand.feasible == best.feasible
-                        and cand.predicted_latency_s
-                        < best.predicted_latency_s):
+                                    predicted_throughput_tps=tput,
+                                    dtype=label)
+                if _gen_better(cand, best):
                     best = cand
         return best
 
@@ -335,7 +390,13 @@ def plan_generate(profile: Dict, budgets: List[Optional[int]], *,
     for budget in budgets:
         chosen: Optional[GenPlanEntry] = None
         for r in range(max(max_inflight, 1), 0, -1):   # capacity-first
-            cand = best_at(budget, r)
+            # candidates union over dtype: a dtype whose shards admit
+            # this in-flight count wins over one that must shed requests
+            cand: Optional[GenPlanEntry] = None
+            for label, prof in profiles:
+                c = best_at(label, prof, budget, r)
+                if c is not None and _gen_better(c, cand):
+                    cand = c
             if cand is not None and cand.feasible:
                 chosen = cand
                 break

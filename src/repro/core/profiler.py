@@ -4,6 +4,14 @@ Measures, per shard of a partitioned checkpoint: load time (real disk ->
 host -> device), compute time (jitted forward after warmup), one-token
 decode time against a KV cache (feeds the generation-aware planner) and
 byte size.  The profile feeds the Pipeline Planner.
+
+Quantized checkpoints profile exactly like full-precision ones — the
+shards ARE smaller on disk and the module fns DO pay the in-jit dequant
+— so ``t_load``/``t_comp``/``t_decode`` are honest per-dtype
+measurements, not scaled estimates.  The profile carries the manifest's
+``quant``/``dtype`` tags so the Pipeline Planner can search shard dtype
+jointly with the schedule (pass one profile per quantized variant as
+``{dtype: profile}``).
 """
 from __future__ import annotations
 
@@ -30,7 +38,9 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
                          jnp.int32)
 
-    profile = {"model": cfg.name, "batch": batch, "seq": seq, "shards": []}
+    profile = {"model": cfg.name, "batch": batch, "seq": seq,
+               "quant": manifest.get("quant"),
+               "ckpt_dtype": manifest.get("dtype", cfg.dtype), "shards": []}
     x = None
     for shard in manifest["shards"]:
         name, kind = shard["name"], shard["kind"]
@@ -61,6 +71,7 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
             t_comps.append(time.perf_counter() - t0)
         row = {
             "name": name, "kind": kind, "bytes": shard["bytes"],
+            "dtype": shard.get("dtype", manifest.get("dtype", cfg.dtype)),
             "t_load": float(np.median(t_loads)),
             "t_comp": float(np.median(t_comps)),
         }

@@ -79,6 +79,7 @@ class ServeStats:
     latency_s: float
     peak_bytes: int
     loads: int
+    streamed_bytes: int
     new_tokens: int
     requests: int
     max_inflight_seen: int
@@ -308,6 +309,7 @@ class BatchScheduler:
         stats = ServeStats(
             rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
             loads=sum(1 for e in self.events if e[1] == "load_end"),
+            streamed_bytes=self.engine._streamed(self.events),
             new_tokens=sum(r.generated for r in self.done.values()),
             requests=len(self.done), max_inflight_seen=self._max_seen,
             cache_bytes_peak=self._cache_peak, events=self.events)

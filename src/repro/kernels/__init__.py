@@ -1,12 +1,14 @@
 """Pallas TPU kernels (compute hot-spots) + jit wrappers + jnp oracles.
 
-  streamed_matmul — grid-pipelined weight streaming (PIPELOAD @ VMEM tier)
-  flash_attention — causal/windowed online-softmax prefill attention
-  flash_decode    — single-token decode over a long KV cache, emitting
-                    unnormalised partials for the cross-shard combine
+  streamed_matmul  — grid-pipelined weight streaming (PIPELOAD @ VMEM tier)
+  quantized_matmul — fused dequant-matmul over int8/int4 shard weights
+  flash_attention  — causal/windowed online-softmax prefill attention
+  flash_decode     — single-token decode over a long KV cache, emitting
+                     unnormalised partials for the cross-shard combine
 """
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.flash_decode import (flash_decode,  # noqa: F401
                                         flash_decode_partial)
-from repro.kernels.streamed_matmul import streamed_matmul  # noqa: F401
+from repro.kernels.streamed_matmul import (quantized_matmul,  # noqa: F401
+                                           streamed_matmul)

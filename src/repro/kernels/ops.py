@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash_attn
 from repro.kernels.flash_decode import (flash_decode as _flash_decode,
                                         flash_decode_partial as _fd_partial)
-from repro.kernels.streamed_matmul import streamed_matmul as _matmul
+from repro.kernels.streamed_matmul import (quantized_matmul as _qmatmul,
+                                           streamed_matmul as _matmul)
 
 
 def _on_tpu() -> bool:
@@ -27,6 +28,16 @@ def matmul(x, w, *, block_m: int = 256, block_n: int = 256,
            block_k: int = 512):
     return _matmul(x, w, block_m=block_m, block_n=block_n, block_k=block_k,
                    interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n",
+                                             "block_k"))
+def quant_matmul(x, w_q, scale, *, bits: int = 8, block_m: int = 256,
+                 block_n: int = 256, block_k: int = 512):
+    """Fused dequant-matmul over int8/int4 per-channel-scaled weights."""
+    return _qmatmul(x, w_q, scale, bits=bits, block_m=block_m,
+                    block_n=block_n, block_k=block_k,
+                    interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit,

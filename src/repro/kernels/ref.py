@@ -14,6 +14,30 @@ def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
                    w.astype(jnp.float32)).astype(x.dtype)
 
 
+def dequant_ref(w_q: jax.Array, scale: jax.Array, *,
+                bits: int = 8) -> jax.Array:
+    """Per-channel dequantization matching checkpoint/quant.py: int8
+    (K, N) values, or int4 nibble-packed uint8 (K/2, N) with row 2i in
+    the low nibble and 2i+1 in the high nibble."""
+    if bits == 8:
+        q = w_q.astype(jnp.float32)
+    else:
+        p = w_q.astype(jnp.uint8)
+        lo = (p & 0xF).astype(jnp.int8)
+        hi = ((p >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=1).reshape(
+            (2 * p.shape[0],) + p.shape[1:]).astype(jnp.float32)
+    return q * scale[None, :].astype(jnp.float32)
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+                     bits: int = 8) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32),
+                   dequant_ref(w_q, scale, bits=bits)).astype(x.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True,
                   window: Optional[int] = None) -> jax.Array:

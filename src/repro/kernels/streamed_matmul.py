@@ -9,6 +9,14 @@ pipeline's automatic tile recycling.
 
 Grid (M/bm, N/bn, K/bk); f32 VMEM scratch accumulator; MXU-aligned
 (128-multiple) tile defaults.
+
+``quantized_matmul`` is the weight-streaming variant for int8/int4
+PIPELOAD shards: the weight tile is DMA'd in its *quantized* form (1/4
+or 1/8 the HBM->VMEM bytes of f32 — the same load-bandwidth win the
+engine gets on the disk->memory tier) and dequantized in-kernel right
+before the MXU dot, so the fp tile never exists outside VMEM scratch.
+Scales are per-output-channel (`checkpoint/quant.py` scheme); int4
+weights arrive nibble-packed along K and are unpacked in-kernel.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.checkpoint import quant as qz
 
 
 def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
@@ -57,3 +67,70 @@ def streamed_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 256,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused dequant-matmul (int8 / int4 weight streaming)
+# ---------------------------------------------------------------------------
+def _dequant_tile(w_ref, bits: int):
+    """Quantized VMEM tile -> f32 at full K rows.  The int4 nibble
+    layout has exactly one production implementation
+    (checkpoint/quant.py::unpack_int4, pure jnp, Pallas-safe); the
+    deliberately independent oracle copy lives in kernels/ref.py."""
+    if bits == 8:
+        return w_ref[...].astype(jnp.float32)
+    return qz.unpack_int4(w_ref[...],
+                          2 * w_ref.shape[0]).astype(jnp.float32)
+
+
+def _quant_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                         n_k: int, bits: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(w_ref, bits) * s_ref[...]   # (bk, bn) * (1, bn)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quantized_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+                     bits: int = 8, block_m: int = 256, block_n: int = 256,
+                     block_k: int = 512, interpret: bool = False
+                     ) -> jax.Array:
+    """x: (M, K) @ dequant(w_q, scale): (K, N) -> (M, N).
+
+    ``w_q`` is int8 ``(K, N)`` for ``bits=8`` or nibble-packed uint8
+    ``(K/2, N)`` for ``bits=4``; ``scale`` is f32 ``(N,)`` per-output-
+    channel.  Requires divisible tiling, and even ``block_k`` rows per
+    int4 tile (one packed byte row = two K rows)."""
+    assert bits in (8, 4), bits
+    m, k = x.shape
+    kw = w_q.shape[0] * (2 if bits == 4 else 1)
+    n = w_q.shape[1]
+    assert k == kw, (x.shape, w_q.shape, bits)
+    assert scale.shape == (n,), scale.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    assert bits == 8 or bk % 2 == 0, bk
+    n_k = k // bk
+    wrows = bk // 2 if bits == 4 else bk
+
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, n_k=n_k, bits=bits),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((wrows, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1, n))

@@ -15,6 +15,12 @@ within the budget.
 round on average, deterministic under ``--seed``) instead of an
 everyone-at-once burst; ``--no-kv-cache`` falls back to the paper's
 sequential per-token re-prefill engine (§V-B2) for comparison.
+
+``--quant int8|int4`` serves per-channel-quantized shards (~4x/8x fewer
+bytes streamed and resident per layer — deeper pin windows and more
+in-flight requests under the same budget); ``--quant auto`` profiles
+every dtype and lets the planner pick shard precision jointly with
+``(num_agents, pin_window, inflight)``.
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ from repro.core import BatchScheduler, Hermes
 from repro.models.api import build_model
 
 CKPT_ROOT = Path("/tmp/repro_ckpts")
+QUANT_CHOICES = ("fp32", "int8", "int4", "auto")
 
 
 def ensure_checkpoint(cfg, seed: int = 0) -> Path:
@@ -57,12 +64,17 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         prompt_len: int = 16, new_tokens: int = 8, reduced: bool = True,
         num_agents: int | None = None, pin_window: int | None = None,
         kv_cache: bool = True, max_inflight: int = 4,
-        arrival_rate: float | None = None, seed: int = 0):
+        arrival_rate: float | None = None, seed: int = 0,
+        quant: str = "fp32"):
+    assert quant in QUANT_CHOICES, quant
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
     ckpt = ensure_checkpoint(cfg)
     hermes = Hermes(ckpt, cfg)
+    # fixed dtype = a one-entry search; "auto" lets the planner pick the
+    # shard precision jointly with the schedule
+    quants = ("fp32", "int8", "int4") if quant == "auto" else (quant,)
     budget = int(budget_mb * 2**20) if budget_mb else None
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
@@ -70,9 +82,11 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
     if not kv_cache:
         # paper's engine (§V-B2): sequential re-prefill, one weight
         # stream per request per token — the baseline the scheduler beats
-        plan = hermes.plan([budget])[0]
+        plan = hermes.plan([budget], quants=quants)[0]
+        hermes = hermes.quantized(plan.dtype)
         agents, pin = num_agents or plan.num_agents, pin_window or 0
         print(f"planner: budget={budget_mb}MB -> {agents} agents, "
+              f"dtype={plan.dtype}, "
               f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
               f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
         eng = hermes.engine(mode="pipeload", budget_bytes=budget,
@@ -84,13 +98,14 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
               f"({requests*new_tokens/dt:.1f} tok/s), "
               f"peak {stats.peak_bytes/2**20:.0f}MB, "
-              f"{stats.loads} shard loads")
+              f"{stats.loads} shard loads "
+              f"({stats.streamed_bytes/2**20:.0f}MB streamed)")
         return out, stats
 
-    hermes.profile(batch=1, seq=prompt_len)
     g = hermes.plan_generate([budget], prompt_len=prompt_len,
                              new_tokens=new_tokens,
-                             max_inflight=max_inflight)[0]
+                             max_inflight=max_inflight,
+                             quants=quants)[0]
     if not g.feasible:
         raise SystemExit(
             f"error: no feasible serving schedule for budget="
@@ -99,10 +114,11 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
             f"{g.cache_bytes/2**20:.1f}MB KV cache at inflight="
             f"{g.inflight}); raise the budget, shrink "
             f"prompt/new-tokens, or pass --no-kv-cache")
+    hermes = hermes.quantized(g.dtype)
     agents = num_agents or g.num_agents
     pin = g.pin_window if pin_window is None else pin_window
     print(f"planner(serve): budget={budget_mb}MB -> {agents} agents, "
-          f"pin={pin}, inflight={g.inflight}, predicted "
+          f"pin={pin}, inflight={g.inflight}, dtype={g.dtype}, predicted "
           f"{g.predicted_throughput_tps:.1f} tok/s aggregate, peak "
           f"{g.predicted_peak_bytes/2**20:.0f}MB "
           f"(cache {g.cache_bytes/2**20:.1f}MB)")
@@ -123,7 +139,8 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"({stats.tokens_per_s:.1f} tok/s aggregate), peak "
           f"{stats.peak_bytes/2**20:.0f}MB "
           f"(cache {stats.cache_bytes_peak/2**20:.1f}MB), "
-          f"{stats.loads} shard loads, "
+          f"{stats.loads} shard loads "
+          f"({stats.streamed_bytes/2**20:.0f}MB streamed), "
           f"max inflight seen {stats.max_inflight_seen}")
     for rid, req in sorted(sched.done.items()):
         print(f"  req{rid}: arrived r{req.arrival_round} admitted "
@@ -149,6 +166,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper's per-token re-prefill engine (§V-B2)")
+    ap.add_argument("--quant", default="fp32", choices=QUANT_CHOICES,
+                    help="shard precision; 'auto' = planner searches "
+                    "dtype jointly with the schedule")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -156,7 +176,7 @@ def main():
         reduced=not args.full, num_agents=args.num_agents,
         pin_window=args.pin_window, kv_cache=not args.no_kv_cache,
         max_inflight=args.max_inflight, arrival_rate=args.arrival_rate,
-        seed=args.seed)
+        seed=args.seed, quant=args.quant)
 
 
 if __name__ == "__main__":

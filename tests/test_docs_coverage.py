@@ -1,0 +1,37 @@
+"""Docs stay in lockstep with the CLI surface: every benchmark entry in
+``benchmarks/run.py`` and every ``launch/serve.py`` flag must be
+documented.  This is the CI "docs check" — it fails the moment a bench
+or flag ships without its docs.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _docs_corpus() -> str:
+    parts = [(REPO / "README.md").read_text()]
+    parts += [p.read_text() for p in sorted((REPO / "docs").glob("*.md"))]
+    return "\n".join(parts)
+
+
+def test_every_benchmark_entry_documented():
+    src = (REPO / "benchmarks" / "run.py").read_text()
+    keys = re.findall(r'"(\w+)":\s*"benchmarks\.', src)
+    assert keys, "could not parse BENCHES from benchmarks/run.py"
+    docs = (REPO / "docs" / "benchmarks.md").read_text()
+    missing = [k for k in keys if f"`{k}`" not in docs]
+    assert not missing, (
+        f"benchmarks/run.py entries missing from docs/benchmarks.md: "
+        f"{missing}")
+
+
+def test_every_serve_flag_documented():
+    src = (REPO / "src" / "repro" / "launch" / "serve.py").read_text()
+    flags = re.findall(r'add_argument\(\s*"(--[\w-]+)"', src)
+    assert flags, "could not parse flags from launch/serve.py"
+    docs = _docs_corpus()
+    missing = [f for f in flags if f"`{f}" not in docs]
+    assert not missing, (
+        f"launch/serve.py flags undocumented (README.md or docs/): "
+        f"{missing}")

@@ -1,0 +1,412 @@
+"""Quantized weight streaming: int8/int4 shard format, fused
+dequant-matmul kernel, engine ledger accounting and dtype-aware planner.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from helpers.hypothesis_compat import given, settings, st
+
+from repro.checkpoint import (QuantizedTensor, ensure_quantized,
+                              load_manifest, load_shard,
+                              partition_and_save, requantize)
+from repro.checkpoint import quant as qz
+from repro.configs import get_config
+from repro.core import Hermes, PipeloadEngine
+from repro.core.planner import plan, plan_generate
+from repro.kernels import ops, ref
+from repro.models.api import build_model
+
+# documented int8 logit tolerance (docs/quantization.md): max |delta|
+# relative to the fp32 logit range on the gpt2 test geometry
+INT8_LOGIT_RTOL = 0.05
+
+
+@pytest.fixture(scope="module")
+def gpt2q(tmp_path_factory):
+    """Small-but-real GPT-2-geometry checkpoint in fp32/int8/int4."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=6, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=1024, vocab_size=1000, vocab_pad_to=8, remat=False)
+    root = tmp_path_factory.mktemp("qckpt")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    paths = {"fp32": root / "fp32"}
+    partition_and_save(params, cfg, paths["fp32"])
+    for q in ("int8", "int4"):
+        paths[q] = root / q
+        requantize(paths["fp32"], paths[q], q)
+    return cfg, paths
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return np.random.default_rng(1).integers(0, 1000, (1, 24))
+
+
+# ---------------------------------------------------------------------------
+# round-trip fidelity of the quantization scheme
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(3, 64), n=st.integers(1, 32),
+       quant=st.sampled_from(["int8", "int4"]), seed=st.integers(0, 2**30))
+def test_quantize_roundtrip_halfstep_bound(k, n, quant, seed):
+    """Per-channel symmetric rounding: |dequant - w| <= scale/2 per
+    element, scale = colmax / qmax."""
+    w = np.random.default_rng(seed).normal(size=(k, n)).astype(np.float32)
+    qt = qz.quantize_array(w, quant)
+    deq = np.asarray(qt.dequantize())
+    assert deq.shape == w.shape and str(deq.dtype) == "float32"
+    qmax = qz.QUANT_SCHEMES[quant][1]
+    halfstep = np.abs(w).max(axis=0, keepdims=True) / qmax / 2
+    assert np.all(np.abs(deq - w) <= halfstep + 1e-7)
+
+
+def test_int4_packing_shapes_and_bytes():
+    w = np.random.default_rng(0).normal(size=(37, 16)).astype(np.float32)
+    qt = qz.quantize_array(w, "int4")
+    assert qt.q.shape == (19, 16) and qt.q.dtype == np.uint8
+    assert qt.shape == (37, 16)
+    # ~1/8 the fp32 payload (+ scales)
+    assert qt.nbytes < w.nbytes / 4
+    # packed values round-trip exactly at the integer level
+    ints = np.clip(np.rint(w / np.asarray(qt.scale)), -7, 7)
+    np.testing.assert_array_equal(np.asarray(qt.unpacked()), ints)
+
+
+def test_quantize_flat_passes_1d_through():
+    flat = {"attn.w_q": np.ones((8, 8), np.float32),
+            "attn_norm": np.ones((8,), np.float32)}
+    stored = qz.quantize_flat(flat, "int8")
+    assert "attn_norm" in stored                    # untouched
+    assert "attn.w_q.__q__" in stored and "attn.w_q.__scale__" in stored
+    assert "attn.w_q" not in stored
+
+
+def test_zero_channel_has_unit_scale():
+    w = np.zeros((8, 4), np.float32)
+    w[:, 0] = 3.0
+    qt = qz.quantize_array(w, "int8")
+    assert np.asarray(qt.scale)[1] == 1.0
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), w, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# partitioned-checkpoint round trip
+# ---------------------------------------------------------------------------
+def test_partition_quant_manifest_and_bytes(gpt2q):
+    cfg, paths = gpt2q
+    m32 = load_manifest(paths["fp32"])
+    m8 = load_manifest(paths["int8"])
+    m4 = load_manifest(paths["int4"])
+    assert m32["quant"] is None and m8["quant"] == "int8"
+    assert m4["quant_scheme"] == qz.SCHEME and m4["quant_bits"] == 4
+    # layer shards are ~all 2-D matmul weight: big shrink end to end
+    assert m32["layer_bytes"] / m8["layer_bytes"] > 3.5
+    assert m32["layer_bytes"] / m4["layer_bytes"] > 7.0
+    for man in (m8, m4):
+        assert man["total_bytes"] == sum(s["bytes"] for s in man["shards"])
+        for s in man["shards"]:
+            assert s["dtype"] == man["quant"]
+            assert s["bytes"] < s["fp_bytes"]
+            assert s["scale_bytes"] > 0 and s["n_quantized"] > 0
+
+
+def test_load_shard_restores_quantized_tree(gpt2q):
+    cfg, paths = gpt2q
+    fp = load_shard(paths["fp32"], "layer_000")
+    q8 = load_shard(paths["int8"], "layer_000")
+    assert isinstance(q8["attn"]["w_q"], QuantizedTensor)
+    assert isinstance(q8["attn_norm"], np.ndarray)       # 1-D stays float
+    np.testing.assert_array_equal(q8["attn_norm"], fp["attn_norm"])
+    deq = np.asarray(q8["attn"]["w_q"].dequantize())
+    w = fp["attn"]["w_q"]
+    assert np.abs(deq - w).max() <= np.abs(w).max() / 127  # < one step
+    # pytree round trip through device put (what the engine does)
+    dev = jax.tree.map(jnp.asarray, q8)
+    assert isinstance(dev["attn"]["w_q"], QuantizedTensor)
+
+
+def test_requantize_rejects_quantized_source(gpt2q, tmp_path):
+    cfg, paths = gpt2q
+    with pytest.raises(ValueError, match="full-precision"):
+        requantize(paths["int8"], tmp_path / "x", "int4")
+
+
+def test_ensure_quantized_retranscodes_stale_variant(tmp_path):
+    """Re-partitioning the source in place must invalidate the derived
+    int8 shards — otherwise --quant serves the OLD weights silently."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=64, vocab_pad_to=8, remat=False)
+    api = build_model(cfg)
+    src, dst = tmp_path / "fp", tmp_path / "q8"
+    partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, src)
+    ensure_quantized(src, dst, "int8")
+    w0 = np.asarray(load_shard(dst, "layer_000")["attn"]["w_q"]
+                    .dequantize())
+    # same source: reuse (no re-transcode) — shard bytes stay identical
+    ensure_quantized(src, dst, "int8")
+    np.testing.assert_array_equal(
+        np.asarray(load_shard(dst, "layer_000")["attn"]["w_q"]
+                   .dequantize()), w0)
+    # new weights at the same path: the variant must be rebuilt
+    bigger = cfg.with_(d_ff=256)       # different bytes -> new fingerprint
+    partition_and_save(build_model(bigger).init(jax.random.PRNGKey(1)),
+                       bigger, src)
+    ensure_quantized(src, dst, "int8")
+    man = load_manifest(dst)
+    assert man["source_total_bytes"] == load_manifest(src)["total_bytes"]
+    w1 = np.asarray(load_shard(dst, "layer_000")["attn"]["w_q"]
+                    .dequantize())
+    assert w1.shape == w0.shape and not np.array_equal(w1, w0)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-matmul kernel vs the jnp oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits,quant", [(8, "int8"), (4, "int4")])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (64, 64, 64, 64, 64, 64),          # single tile
+    (128, 256, 64, 64, 64, 64),        # multi-tile K streaming
+    (64, 128, 192, 64, 64, 128),       # uneven grid
+])
+def test_quant_matmul_sweep(m, k, n, bm, bn, bk, bits, quant):
+    rng = np.random.default_rng(m + k + n + bits)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    qt = qz.quantize_array(rng.normal(size=(k, n)).astype(np.float32),
+                           quant)
+    w_q, scale = jnp.asarray(qt.q), jnp.asarray(qt.scale)
+    got = ops.quant_matmul(x, w_q, scale, bits=bits, block_m=bm,
+                           block_n=bn, block_k=bk)
+    want = ref.quant_matmul_ref(x, w_q, scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+    # the oracle itself equals a dense matmul over dequantized weights
+    dense = np.asarray(x) @ np.asarray(qt.dequantize())
+    np.testing.assert_allclose(np.asarray(want), dense, atol=1e-3,
+                               rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mi=st.integers(1, 2), ki=st.integers(1, 3), ni=st.integers(1, 2),
+       bits=st.sampled_from([8, 4]), seed=st.integers(0, 2**30))
+def test_quant_matmul_property(mi, ki, ni, bits, seed):
+    m, k, n = 64 * mi, 64 * ki, 64 * ni
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    qt = qz.quantize_array(rng.normal(size=(k, n)).astype(np.float32),
+                           "int8" if bits == 8 else "int4")
+    got = ops.quant_matmul(x, jnp.asarray(qt.q), jnp.asarray(qt.scale),
+                           bits=bits, block_m=64, block_n=64, block_k=64)
+    want = ref.quant_matmul_ref(x, jnp.asarray(qt.q),
+                                jnp.asarray(qt.scale), bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# engine: quantized checkpoints stream through PIPELOAD
+# ---------------------------------------------------------------------------
+def test_int8_generate_matches_fp32_within_tolerance(gpt2q, toks):
+    cfg, paths = gpt2q
+    ref_eng = PipeloadEngine(paths["fp32"], cfg, mode="pipeload",
+                             num_agents=2)
+    ref_logits, ref_stats = ref_eng.run_single(toks)
+    eng = PipeloadEngine(paths["int8"], cfg, mode="pipeload", num_agents=2)
+    logits, stats = eng.run_single(toks)
+    err = np.abs(np.asarray(logits) - np.asarray(ref_logits)).max()
+    assert err <= INT8_LOGIT_RTOL * np.abs(np.asarray(ref_logits)).max()
+    # the stream itself shrank ~4x for the same load count
+    assert stats.loads == ref_stats.loads
+    assert ref_stats.streamed_bytes / stats.streamed_bytes > 3.5
+
+
+def test_int8_kv_decode_tokens_match_fp32(gpt2q, toks):
+    cfg, paths = gpt2q
+    new = 4
+    outs = {}
+    for d in ("fp32", "int8"):
+        eng = PipeloadEngine(paths[d], cfg, mode="pipeload", num_agents=2)
+        eng.warmup(1, toks.shape[1], decode=True,
+                   total_len=toks.shape[1] + new)
+        out, stats = eng.run_generate(toks, new, kv_cache=True)
+        outs[d] = np.asarray(out)
+        assert stats.kv_cache and stats.cache_bytes > 0
+    np.testing.assert_array_equal(outs["int8"], outs["fp32"])
+
+
+def test_int4_runs_and_streams_fewer_bytes(gpt2q, toks):
+    cfg, paths = gpt2q
+    eng = PipeloadEngine(paths["int4"], cfg, mode="pipeload", num_agents=2)
+    eng.warmup(1, toks.shape[1], decode=True, total_len=toks.shape[1] + 2)
+    out, stats = eng.run_generate(toks, 2, kv_cache=True)
+    assert out.shape == (1, toks.shape[1] + 2)
+    m32 = load_manifest(paths["fp32"])
+    assert stats.streamed_bytes < m32["total_bytes"] / 4
+
+
+def test_ledger_floor_uses_quantized_bytes(gpt2q, toks):
+    """A budget far below the fp32 decode floor still runs int8 within
+    budget — the ledger and _kv_floor account quantized shard bytes."""
+    cfg, paths = gpt2q
+    new = 3
+    cache_total = cfg.num_layers * cfg.cache_bytes(1, toks.shape[1] + new)
+    floors = {}
+    for d in ("fp32", "int8"):
+        eng = PipeloadEngine(paths[d], cfg, mode="pipeload", num_agents=2)
+        floors[d] = eng._kv_floor(cache_total)
+    assert floors["fp32"] / floors["int8"] > 2.0
+
+    m8 = load_manifest(paths["int8"])
+    layer8 = m8["layer_bytes"] // cfg.num_layers
+    budget = floors["int8"] + 2 * layer8
+    assert budget < floors["fp32"]      # fp32 would refuse this budget
+    eng = PipeloadEngine(paths["fp32"], cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    with pytest.raises(ValueError, match="KV decode floor"):
+        eng.run_generate(toks, new, kv_cache=True)
+
+    eng = PipeloadEngine(paths["int8"], cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    eng.warmup(1, toks.shape[1], decode=True,
+               total_len=toks.shape[1] + new)
+    out, stats = eng.run_generate(toks, new, kv_cache=True)
+    assert stats.peak_bytes <= budget
+
+
+def test_batch_round_scheduler_quantized(gpt2q):
+    """Continuous batching over int8 shards: same tokens as sequential
+    int8 runs, budget honoured at a level fp32 cannot reach."""
+    from repro.core import BatchScheduler
+    cfg, paths = gpt2q
+    new, plen = 3, 12
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, 1000, (2, plen))
+    m8 = load_manifest(paths["int8"])
+    layer8 = m8["layer_bytes"] // cfg.num_layers
+    cache2 = 2 * cfg.num_layers * cfg.cache_bytes(1, plen + new)
+    eng = PipeloadEngine(paths["int8"], cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=None)
+    budget = eng._kv_floor(cache2) + 2 * layer8
+    eng = PipeloadEngine(paths["int8"], cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    sched = BatchScheduler(eng, max_inflight=2, max_total_len=plen + new)
+    sched.warmup(prompt_lens=[plen])
+    for i in range(2):
+        sched.submit(prompts[i], new)
+    outs, stats = sched.run()
+    assert stats.peak_bytes <= budget
+    for i in range(2):
+        seq = PipeloadEngine(paths["int8"], cfg, mode="pipeload",
+                             num_agents=2)
+        seq.warmup(1, plen, decode=True, total_len=plen + new)
+        want, _ = seq.run_generate(prompts[i:i + 1], new, kv_cache=True)
+        np.testing.assert_array_equal(outs[i], np.asarray(want)[0])
+
+
+# ---------------------------------------------------------------------------
+# planner: dtype joins the schedule search
+# ---------------------------------------------------------------------------
+def synth_profile(n, t_load, t_comp, layer_bytes, other_bytes, seq=32):
+    return {
+        "num_layers": n, "seq": seq,
+        "layer_t_load": t_load, "layer_t_comp": t_comp,
+        "layer_bytes": layer_bytes, "other_bytes": other_bytes,
+        "shards": (
+            [{"name": "embed", "kind": "embed", "bytes": other_bytes,
+              "t_load": 0.0, "t_comp": 0.0}]
+            + [{"name": f"layer_{i:03d}", "kind": "layer",
+                "bytes": layer_bytes, "t_load": t_load, "t_comp": t_comp,
+                "t_decode": t_comp / seq}
+               for i in range(n)]),
+    }
+
+
+def quant_profiles(n, t_load, t_comp, layer_bytes, other_bytes):
+    """fp32 profile + its idealised int8 shadow (4x fewer bytes, 4x
+    faster loads, same compute)."""
+    return {
+        "fp32": synth_profile(n, t_load, t_comp, layer_bytes, other_bytes),
+        "int8": synth_profile(n, t_load / 4, t_comp,
+                              max(layer_bytes // 4, 1),
+                              max(other_bytes // 4, 1)),
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 16), tl=st.floats(0.01, 0.1),
+       tc=st.floats(0.001, 0.02), spare=st.integers(1, 3))
+def test_planner_prefers_int8_under_tight_budget(n, tl, tc, spare):
+    """A budget below the fp32 floor but with int8 headroom must choose
+    the int8 shards — the satellite property of the dtype search."""
+    lb, other, cache = 40, 20, 2
+    profs = quant_profiles(n, tl, tc, lb, other)
+    # below fp32's floor (other + cache + one layer)…
+    fp32_floor = other + n * cache + lb
+    budget = min(fp32_floor - 1,
+                 other // 4 + n * cache + (spare + 1) * (lb // 4) + 1)
+    entries = plan_generate(profs, [budget], new_tokens=6,
+                            cache_bytes_per_layer=cache)
+    e = entries[0]
+    assert e.feasible and e.dtype == "int8"
+    assert e.predicted_peak_bytes <= budget
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 12), tl=st.floats(0.01, 0.1),
+       tc=st.floats(0.001, 0.01), cap=st.integers(2, 4))
+def test_planner_int8_admits_no_fewer_inflight(n, tl, tc, cap):
+    """With the dtype search widened, the capacity-first planner never
+    admits FEWER requests than the fp32-only search at the same
+    budget."""
+    lb, other, cache = 40, 20, 4
+    profs = quant_profiles(n, tl, tc, lb, other)
+    budget = other + n * cache * cap + 4 * lb
+    only32 = plan_generate(profs["fp32"], [budget], new_tokens=6,
+                           cache_bytes_per_layer=cache, max_inflight=cap)[0]
+    joint = plan_generate(profs, [budget], new_tokens=6,
+                          cache_bytes_per_layer=cache, max_inflight=cap)[0]
+    assert joint.feasible
+    if only32.feasible:
+        assert joint.inflight >= only32.inflight
+
+
+def test_plan_dict_tags_dtype_and_single_profile_is_untagged():
+    prof = synth_profile(8, 0.05, 0.004, 40, 20)
+    single = plan(prof, [None])[0]
+    assert single.dtype is None
+    tagged = plan({"fp32": prof}, [None])[0]
+    assert tagged.dtype == "fp32"
+    assert tagged.num_agents == single.num_agents
+    assert tagged.predicted_latency_s == single.predicted_latency_s
+
+
+def test_hermes_quantized_plan_end_to_end(gpt2q, toks):
+    """Hermes facade: quants= search picks a quantized dtype under a
+    budget fp32 cannot satisfy, and the planned engine runs within it."""
+    cfg, paths = gpt2q
+    h = Hermes(paths["fp32"], cfg)
+    h.profile(batch=1, seq=24, force=True)
+    new = 3
+    m8 = load_manifest(paths["int8"])
+    layer8 = m8["layer_bytes"] // cfg.num_layers
+    other8 = m8["total_bytes"] - m8["layer_bytes"]
+    cache_total = cfg.num_layers * cfg.cache_bytes(1, toks.shape[1] + new)
+    budget = other8 + cache_total + 4 * layer8
+    # sanity: this budget sits below the fp32 decode floor, so only the
+    # int8 shards can satisfy it
+    fp_eng = PipeloadEngine(paths["fp32"], cfg, mode="pipeload")
+    assert budget < fp_eng._kv_floor(cache_total)
+    g = h.plan_generate([budget], batch=1, prompt_len=toks.shape[1],
+                        new_tokens=new, quants=("fp32", "int8"))[0]
+    assert g.feasible and g.dtype == "int8"
+    hq = h.quantized(g.dtype)
+    assert hq.dir != h.dir
+    eng = PipeloadEngine(hq.dir, cfg, mode="pipeload",
+                         num_agents=g.num_agents, pin_window=g.pin_window,
+                         budget_bytes=budget)
+    eng.warmup(1, toks.shape[1], decode=True,
+               total_len=toks.shape[1] + new)
+    _, stats = eng.run_generate(toks, new, kv_cache=True)
+    assert stats.peak_bytes <= budget
