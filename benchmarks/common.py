@@ -10,22 +10,33 @@ import numpy as np
 
 from repro.checkpoint import (ensure_quantized, load_manifest,
                               partition_and_save)
-from repro.configs import get_config
+from repro.configs import get_config, list_paper_models
 from repro.models.api import build_model
 
 ROOT = Path(__file__).resolve().parents[1]
 BENCH_DIR = ROOT / "experiments" / "bench"
 CKPT_ROOT = Path("/tmp/repro_bench_ckpts")
 
-# Paper workloads (Table I).  GPT-J uses a reduced-DEPTH clone (6 of 28
+# Paper workloads (Table I), derived from the config registry: encoder
+# models (BERT / ViT) run single-pass, causal decoders generate 8
+# tokens.  Oversized decoders use a reduced-DEPTH clone (GPT-J: 6 of 28
 # layers): per-layer bytes/latencies are exact, totals extrapolate by
 # depth — recorded in every emitted row as depth_frac.
-PAPER_MODELS = {
-    "bert_large": {"layers": 24, "gen": 0},
-    "gpt2_base": {"layers": 24, "gen": 8},
-    "vit_large": {"layers": 24, "gen": 0},
-    "gpt_j": {"layers": 6, "gen": 8},
-}
+_DEPTH_CAP = {"gpt_j": 6}
+
+
+def _paper_models():
+    table = {}
+    for name in list_paper_models():
+        cfg = get_config(name)
+        table[name] = {
+            "layers": _DEPTH_CAP.get(name, cfg.num_layers),
+            "gen": 8 if cfg.causal else 0,
+        }
+    return table
+
+
+PAPER_MODELS = _paper_models()
 
 
 def paper_cfg(name: str):

@@ -3,14 +3,20 @@
     PYTHONPATH=src python -m benchmarks.run [--only fig2,table2,...]
 
 Prints ``name,us_per_call,derived`` CSV; detailed rows land in
-experiments/bench/*.json.
+experiments/bench/*.json, and each entry's headline CSV lines are also
+written to a repo-root ``BENCH_<entry>.json`` so the perf trajectory
+stays machine-readable across PRs without parsing stdout.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
 
 BENCHES = {
     "fig2": "benchmarks.bench_memory_distribution",
@@ -21,9 +27,28 @@ BENCHES = {
     "decode": "benchmarks.bench_decode",
     "batch_decode": "benchmarks.bench_batch_decode",
     "quant": "benchmarks.bench_quant",
+    "moe": "benchmarks.bench_moe_stream",
     "roofline": "benchmarks.bench_roofline",
     "kernels": "benchmarks.bench_kernels",
 }
+
+
+def _headline_rows(lines):
+    """Parse ``name,us_per_call,derived`` CSV lines into dicts."""
+    rows = []
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    return rows
+
+
+def write_summary(entry: str, lines, seconds: float) -> Path:
+    out = ROOT / f"BENCH_{entry}.json"
+    out.write_text(json.dumps(
+        {"entry": entry, "seconds": round(seconds, 2),
+         "rows": _headline_rows(lines)}, indent=1) + "\n")
+    return out
 
 
 def main() -> None:
@@ -39,12 +64,16 @@ def main() -> None:
     for name in names:
         mod = importlib.import_module(BENCHES[name])
         t0 = time.time()
+        lines = []
         try:
             for line in mod.run():
+                lines.append(line)
                 print(line, flush=True)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures += 1
+        else:
+            write_summary(name, lines, time.time() - t0)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} bench(es) failed")

@@ -20,6 +20,18 @@ engine's ledger and the KV decode floor all shrink by ~4x (int8) / ~8x
 (int4) without opening a shard.  ``load_shard`` restores quantized
 arrays as ``QuantizedTensor`` pytree leaves; dequantization happens
 inside the jitted module fns (core/modules.py).
+
+MoE-family checkpoints default to the **expert split**
+(``expert_split=True``): each layer becomes an attention+router shard
+(kind ``"layer"`` — still the pipeline stage the Loading Agents stripe)
+plus ONE SHARD PER EXPERT (kind ``"expert"``, named
+``layer_<i>_expert_<e>``, carrying its owning layer's ``index`` and its
+``expert`` id).  Per-expert byte sizes land in the manifest so the
+Pipeline Planner and the ExpertCache reason about routing-sparse
+streaming without opening shards; ``requantize`` transcodes expert
+shards like any other, so int8/int4 expert streaming falls out for
+free.  ``expert_split=False`` keeps the paper's whole-layer shards (the
+bench baseline).
 """
 from __future__ import annotations
 
@@ -31,7 +43,11 @@ import jax
 import numpy as np
 
 from repro.checkpoint import quant as qz
-from repro.models.config import ModelConfig
+from repro.models.config import DENSE, MOE, VLM, ModelConfig
+
+# Families whose param trees use the dense layout this partitioner (and
+# the engine's module fns) understand.
+PARTITION_FAMILIES = (DENSE, MOE, VLM)
 
 
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -57,7 +73,7 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> dict:
 
 def _save_shard(path: Path, name: str, flat: Dict[str, np.ndarray],
                 kind: str, index: int, quant: Optional[str],
-                base_dtype: str) -> dict:
+                base_dtype: str, extra: Optional[dict] = None) -> dict:
     """Write one (possibly quantized) shard and return its manifest row."""
     fp_bytes = int(sum(a.nbytes for a in flat.values()))
     stored = qz.quantize_flat(flat, quant)
@@ -65,6 +81,8 @@ def _save_shard(path: Path, name: str, flat: Dict[str, np.ndarray],
     nbytes = int(sum(np.asarray(a).nbytes for a in stored.values()))
     row = {"name": name, "kind": kind, "index": index, "bytes": nbytes,
            "dtype": quant or base_dtype}
+    if extra:
+        row.update(extra)
     if quant:
         row["fp_bytes"] = fp_bytes
         row["scale_bytes"] = int(sum(
@@ -75,20 +93,36 @@ def _save_shard(path: Path, name: str, flat: Dict[str, np.ndarray],
 
 
 def partition_and_save(params: dict, cfg: ModelConfig, path, *,
-                       quant: Optional[str] = None) -> dict:
+                       quant: Optional[str] = None,
+                       expert_split: Optional[bool] = None) -> dict:
     """Split a dense-family param tree (stacked layers) into shards.
 
-    ``quant`` in {None, "int8", "int4"} selects the shard precision."""
+    ``quant`` in {None, "int8", "int4"} selects the shard precision.
+    ``expert_split`` (MoE only; defaults to True for MoE families)
+    splits each layer into an attention+router shard plus one shard per
+    expert — the expert-streaming checkpoint layout."""
     assert quant is None or quant in qz.QUANT_SCHEMES, quant
+    if cfg.family not in PARTITION_FAMILIES:
+        raise ValueError(
+            f"model family '{cfg.family}' ({cfg.name}) is not supported "
+            f"by the layer partitioner / PIPELOAD engine; supported "
+            f"families: {', '.join(PARTITION_FAMILIES)}")
+    if expert_split is None:
+        expert_split = cfg.family == MOE
+    if expert_split and cfg.family != MOE:
+        raise ValueError(
+            f"expert_split needs an MoE-family config; '{cfg.name}' is "
+            f"family '{cfg.family}'")
     path = Path(path)
     path.mkdir(parents=True, exist_ok=True)
     params = jax.tree.map(np.asarray, params)
 
     shards: List[dict] = []
 
-    def save(name: str, tree: dict, kind: str, index: int = -1):
+    def save(name: str, tree: dict, kind: str, index: int = -1,
+             extra: Optional[dict] = None):
         shards.append(_save_shard(path, name, _flatten(tree), kind, index,
-                                  quant, cfg.dtype))
+                                  quant, cfg.dtype, extra))
 
     embed_tree = {"embed": params["embed"]}
     if "patch_proj" in params:
@@ -98,7 +132,16 @@ def partition_and_save(params: dict, cfg: ModelConfig, path, *,
     stacked = params["layers"]
     for i in range(cfg.num_layers):
         layer = jax.tree.map(lambda a: a[i], stacked)
-        save(f"layer_{i:03d}", layer, "layer", i)
+        if expert_split:
+            moe_p = layer.pop("moe")
+            layer["moe"] = {"router": moe_p["router"]}
+            save(f"layer_{i:03d}", layer, "layer", i)
+            for e in range(cfg.n_experts):
+                ex = {k: moe_p[k][e] for k in ("w_gate", "w_up", "w_down")}
+                save(f"layer_{i:03d}_expert_{e:03d}", ex, "expert", i,
+                     extra={"expert": e})
+        else:
+            save(f"layer_{i:03d}", layer, "layer", i)
 
     head_tree = {"final_norm": params["final_norm"]}
     if "lm_head" in params:
@@ -106,13 +149,14 @@ def partition_and_save(params: dict, cfg: ModelConfig, path, *,
     save("head", head_tree, "head")
 
     manifest = _build_manifest(cfg.name, cfg.num_layers, cfg.dtype, shards,
-                               quant)
+                               quant, expert_split=expert_split)
     (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
     return manifest
 
 
 def _build_manifest(model: str, num_layers: int, dtype: str,
-                    shards: List[dict], quant: Optional[str]) -> dict:
+                    shards: List[dict], quant: Optional[str], *,
+                    expert_split: bool = False) -> dict:
     manifest = {
         "model": model,
         "num_layers": num_layers,
@@ -123,6 +167,13 @@ def _build_manifest(model: str, num_layers: int, dtype: str,
         "layer_bytes": int(sum(s["bytes"] for s in shards
                                if s["kind"] == "layer")),
     }
+    if expert_split:
+        expert_rows = [s for s in shards if s["kind"] == "expert"]
+        manifest["expert_split"] = True
+        manifest["expert_total_bytes"] = int(sum(s["bytes"]
+                                                 for s in expert_rows))
+        manifest["experts_per_layer"] = (len(expert_rows) // num_layers
+                                         if num_layers else 0)
     if quant:
         manifest["quant_scheme"] = qz.SCHEME
         manifest["quant_bits"] = qz.QUANT_SCHEMES[quant][0]
@@ -146,10 +197,14 @@ def requantize(src, dst, quant: str) -> dict:
     for s in src_man["shards"]:
         with np.load(src / f"{s['name']}.npz") as z:
             flat = {k: z[k] for k in z.files}
+        extra = {"expert": s["expert"]} if "expert" in s else None
         shards.append(_save_shard(dst, s["name"], flat, s["kind"],
-                                  s["index"], quant, src_man["dtype"]))
+                                  s["index"], quant, src_man["dtype"],
+                                  extra))
     manifest = _build_manifest(src_man["model"], src_man["num_layers"],
-                               src_man["dtype"], shards, quant)
+                               src_man["dtype"], shards, quant,
+                               expert_split=bool(
+                                   src_man.get("expert_split")))
     manifest["source_total_bytes"] = src_man["total_bytes"]
     (dst / "manifest.json").write_text(json.dumps(manifest, indent=1))
     return manifest

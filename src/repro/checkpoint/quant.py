@@ -135,8 +135,17 @@ def unpack_int4(packed, rows: int):
 # ---------------------------------------------------------------------------
 # Quantize / dequantize arrays
 # ---------------------------------------------------------------------------
-def quantizable(a: np.ndarray) -> bool:
-    """Only the 2-D matmul weights carry the bytes worth shrinking."""
+def quantizable(a: np.ndarray, key: Optional[str] = None) -> bool:
+    """Only the 2-D matmul weights carry the bytes worth shrinking.
+
+    MoE routers are exempt even though they are 2-D: a router is a
+    rounding error of the byte total (d_model x n_experts) but
+    routing-CRITICAL — an int8 rounding flip changes the top-k expert
+    set discretely, which moves whole experts' worth of output, not an
+    epsilon.  Keeping it at checkpoint dtype keeps quantized MoE token
+    selection aligned with fp32 routing."""
+    if key is not None and key.split(".")[-1] == "router":
+        return False
     a = np.asarray(a)
     return a.ndim == 2 and jnp.issubdtype(a.dtype, jnp.floating)
 
@@ -171,7 +180,7 @@ def quantize_flat(flat: Dict[str, np.ndarray],
         return dict(flat)
     out: Dict[str, np.ndarray] = {}
     for key, arr in flat.items():
-        if quantizable(arr):
+        if quantizable(arr, key):
             qt = quantize_array(arr, quant)
             out[f"{key}.{_Q}"] = np.asarray(qt.q)
             out[f"{key}.{_SCALE}"] = np.asarray(qt.scale)

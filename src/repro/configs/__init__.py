@@ -1,7 +1,10 @@
 """Config registry: 10 assigned architectures + the 4 Hermes paper models.
 
-``get_config(name)`` returns the full-size ModelConfig; ``--arch <id>`` in
-the launchers resolves through this registry.  Long-context (500k) decode
+``get(name)`` validates and returns the full-size ModelConfig (clear
+ValueError listing the choices for typos); ``names()`` enumerates the
+registry — ``--arch <id>`` in the launchers uses it for argparse
+``choices``.  ``get_config(name)`` is the unchecked deep-import
+resolver.  Long-context (500k) decode
 uses ``long_variant(cfg)``: sub-quadratic archs pass through unchanged,
 full-attention dense archs switch to their sliding-window variant (see
 DESIGN.md §Shape coverage).
@@ -30,6 +33,23 @@ _PAPER = ["bert_large", "gpt2_base", "vit_large", "gpt_j"]
 
 def _norm(name: str) -> str:
     return name.replace("-", "_").replace(".", "_")
+
+
+def names() -> List[str]:
+    """Every registered architecture id (assigned + paper models) — the
+    valid ``--arch`` choices."""
+    return list(_ASSIGNED) + list(_PAPER)
+
+
+def get(name: str) -> ModelConfig:
+    """Resolve an architecture id (dashes/dots tolerated) to its
+    ModelConfig, with a readable error for typos instead of an opaque
+    deep-import failure."""
+    key = _norm(name)
+    if key not in names():
+        raise ValueError(
+            f"unknown architecture '{name}'; choices: {', '.join(names())}")
+    return get_config(key)
 
 
 def get_config(name: str) -> ModelConfig:

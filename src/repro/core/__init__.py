@@ -4,10 +4,12 @@ Execution engine (loading/inference/daemon agents + signals), layer
 profiler, pipeline planner and the Hermes facade tying them together.
 """
 from repro.core.engine import MODES, PipeloadEngine, RunStats  # noqa: F401
+from repro.core.expert_stream import (ExpertCache,  # noqa: F401
+                                      ExpertStreamEngine)
 from repro.core.hermes import Hermes  # noqa: F401
 from repro.core.planner import (GenPlanEntry, PlanEntry,  # noqa: F401
-                                analytic_latency, plan, plan_generate,
-                                simulate)
+                                analytic_latency, expected_unique_experts,
+                                plan, plan_generate, simulate)
 from repro.core.profiler import profile_model  # noqa: F401
 from repro.core.scheduler import (BatchScheduler, Request,  # noqa: F401
                                   ServeStats)

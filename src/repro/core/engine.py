@@ -48,6 +48,18 @@ batch-round admission maths all shrink with the shards), and the module
 fns dequantize in-jit at compute time.  The per-layer fp copy is a
 transient XLA temporary — like activations, it is not a resident tier
 the ledger tracks.
+
+Expert-split MoE checkpoints (manifest ``expert_split``,
+core/expert_stream.py) change WHAT a pipeline stage is, not how it
+flows: the Loading Agents stripe the per-layer attention+router shards
+exactly as above, and the Inference Agent's per-layer step becomes
+router-then-demand-load — run the attention+router module, read back the
+batch's top-k expert ids, fetch only that union (LRU ExpertCache hits
+skip the disk; misses stream on a worker pool), then run the combine
+module over the streamed experts.  The cache's capacity is reserved
+through the ledger up front for budgeted runs (the KV-page protocol:
+the Inference Agent raises ``S_dest`` and must never park on ``S_stop``
+itself) and shrinks under admission pressure via LRU eviction.
 """
 from __future__ import annotations
 
@@ -83,6 +95,12 @@ class RunStats:
     decode_s: float = 0.0
     cache_bytes: int = 0
     kv_cache: bool = False
+    # expert-streaming extras (0 for dense / whole-layer MoE runs)
+    expert_hits: int = 0
+    expert_misses: int = 0
+    expert_evictions: int = 0
+    expert_cache_bytes: int = 0
+    unique_experts_per_round: float = 0.0
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -91,6 +109,12 @@ class RunStats:
     def per_token_s(self) -> float:
         """Mean latency per generated token (whole run / tokens)."""
         return self.latency_s / self.new_tokens if self.new_tokens else 0.0
+
+    @property
+    def expert_hit_rate(self) -> float:
+        """Fraction of expert activations served from the ExpertCache."""
+        total = self.expert_hits + self.expert_misses
+        return self.expert_hits / total if total else 0.0
 
 
 class _Ledger:
@@ -123,7 +147,8 @@ class PipeloadEngine:
     def __init__(self, ckpt_dir, cfg: ModelConfig, *,
                  mode: str = "pipeload", num_agents: int = 4,
                  budget_bytes: Optional[int] = None, pin_window: int = 0,
-                 attn_impl: Optional[str] = "auto"):
+                 attn_impl: Optional[str] = "auto",
+                 expert_cache_bytes: Optional[int] = None):
         assert mode in MODES, mode
         self.dir = Path(ckpt_dir)
         self.cfg = cfg
@@ -138,6 +163,14 @@ class PipeloadEngine:
                             if s["kind"] == "layer"]
         # persistent across pipeline rounds (pinning / non-destroying modes)
         self._resident: Dict[str, dict] = {}
+        # expert-split MoE checkpoints demand-load experts post-router
+        self.expert = None
+        self.expert_cache_bytes = expert_cache_bytes
+        if self.manifest.get("expert_split"):
+            from repro.core.expert_stream import ExpertStreamEngine
+            self.expert = ExpertStreamEngine(
+                self.dir, self.manifest, cfg, self.fns, workers=self.m,
+                cache_bytes=expert_cache_bytes)
 
     # ------------------------------------------------------------------
     def warmup(self, batch: int, seq: int, *, decode: bool = False,
@@ -156,10 +189,10 @@ class PipeloadEngine:
         if decode:
             total = total_len or (seq + 1)
             self.fns["embed"](emb, tokens[:, -1:])   # single-token shape
-            _, cache = self.fns["layer_cache"](w0, x, total)
-            x1, _ = self.fns["layer_decode"](w0, x[:, -1:], cache, seq)
+            _, cache = self._layer_cache(0, w0, x, total)
+            x1, _ = self._layer_decode(0, w0, x[:, -1:], cache, seq)
             self.fns["head"](head, x1).block_until_ready()
-        x = self.fns["layer"](w0, x)
+        x = self._apply_layer(w0, x, k=0)
         self.fns["head"](head, x).block_until_ready()
         del w0, emb, head
         return self
@@ -170,10 +203,27 @@ class PipeloadEngine:
         host = load_shard(self.dir, name)
         return jax.tree.map(jnp.asarray, host)
 
-    def _apply_layer(self, weights, x):
+    # Per-layer apply paths.  Expert-split MoE checkpoints route through
+    # the ExpertStreamEngine (router -> demand-load union -> combine);
+    # everything else runs the whole-layer jitted module fns.
+    def _apply_layer(self, weights, x, k: int = 0):
+        if self.expert is not None:
+            return self.expert.layer(self.layer_names[k], weights, x)
         y = self.fns["layer"](weights, x)
         y.block_until_ready()
         return y
+
+    def _layer_cache(self, k: int, weights, x, total_len: int):
+        if self.expert is not None:
+            return self.expert.layer_cache(self.layer_names[k], weights, x,
+                                           total_len)
+        return self.fns["layer_cache"](weights, x, total_len)
+
+    def _layer_decode(self, k: int, weights, x, cache, pos):
+        if self.expert is not None:
+            return self.expert.layer_decode(self.layer_names[k], weights, x,
+                                            cache, pos)
+        return self.fns["layer_decode"](weights, x, cache, pos)
 
     def _streamed(self, events) -> int:
         """Total shard bytes read from disk this run (manifest sizes, so
@@ -194,8 +244,10 @@ class PipeloadEngine:
         """
         names = self.layer_names
         n = len(names)
+        if self.expert is not None:
+            self.expert.begin_round()
         if apply_fn is None:
-            apply_fn = lambda k, w, h: self._apply_layer(w, h)  # noqa: E731
+            apply_fn = lambda k, w, h: self._apply_layer(w, h, k=k)  # noqa: E731,E501
         ready: Dict[int, dict] = {}
         ready_cond = threading.Condition()   # carries S_comp signals
         destroy_q: List[Tuple[int, dict]] = []
@@ -349,20 +401,65 @@ class PipeloadEngine:
                 self._resident[aux] = self._load(aux)
                 events.append((time.perf_counter() - t0, "load_end", aux))
 
+    def _bind_expert(self, ledger: _Ledger, events, t0, *,
+                     round_tokens: int = 1):
+        """Reserve the ExpertCache's capacity on this run's ledger (no-op
+        when already bound to it).  Called after the run's fixed
+        reservations (aux shards, KV pages) so the auto capacity is the
+        budget headroom left once the pinned window and one streaming
+        layer are spoken for.  ``round_tokens`` is the widest batch this
+        run's rounds feed the router (a prefill's batch*seq); the cache
+        must fit that round's expert working set, or the run would wedge
+        mid-pipeline with every fetched expert locked."""
+        if self.expert is None or self.expert.bound_to(ledger):
+            return
+        cap = self.expert_cache_bytes
+        need = self.expert.working_set_bytes(round_tokens)
+        if self.budget is not None:
+            sizes = [self.shards[nm]["bytes"] for nm in self.layer_names]
+            pinned = sum(sizes[:self.pin])
+            streaming = max(sizes[self.pin:], default=0)
+            head = self.budget - ledger.resident - pinned - streaming
+            if cap is None:
+                cap = head
+            elif min(cap, self.expert.total_bytes) > head:
+                # reserving past the headroom would park the Inference
+                # Agent on S_stop forever — fail loudly instead
+                raise ValueError(
+                    f"expert_cache_bytes={cap} does not fit budget "
+                    f"{self.budget}: only {head} bytes of headroom remain "
+                    f"after other shards, KV pages, the pinned window and "
+                    f"one streaming layer")
+        elif cap is None:
+            cap = self.expert.total_bytes
+        if min(cap, self.expert.total_bytes) < need:
+            raise ValueError(
+                f"expert cache too small for this workload: "
+                f"{min(cap, self.expert.total_bytes)} bytes available but "
+                f"a {round_tokens}-token round can lock "
+                f"{need} bytes of experts (min(n_experts, tokens*top_k) "
+                f"co-resident); raise the budget / expert_cache_bytes, or "
+                f"let the generation-aware planner size the schedule")
+        self.expert.reserve(ledger, cap, events, t0)
+
     def _forward_once(self, tokens, ledger, events, t0) -> jnp.ndarray:
         """embed -> pipelined layers -> head."""
         self._ensure_aux(ledger, events, t0)
+        self._bind_expert(ledger, events, t0,
+                          round_tokens=tokens.shape[0] * tokens.shape[1])
         x = self.fns["embed"](self._resident["embed"], tokens)
 
         if self.mode == "baseline":
             # load-all-then-infer
+            if self.expert is not None:
+                self.expert.begin_round()
             weights = {}
             for name in self.layer_names:
                 ledger.acquire(self.shards[name]["bytes"], lambda: False)
                 weights[name] = self._load(name)
                 events.append((time.perf_counter() - t0, "load_end", name))
-            for name in self.layer_names:
-                x = self._apply_layer(weights[name], x)
+            for k, name in enumerate(self.layer_names):
+                x = self._apply_layer(weights[name], x, k=k)
             self._baseline_weights = weights     # resident (no destruction)
         else:
             destroy = self.mode == "pipeload"
@@ -371,10 +468,20 @@ class PipeloadEngine:
         return self.fns["head"](self._resident["head"], x)
 
     # ------------------------------------------------------------------
+    def _expert_snap(self) -> Optional[dict]:
+        return self.expert.snapshot() if self.expert is not None else None
+
+    def _expert_stats(self, snap: Optional[dict]) -> dict:
+        """RunStats expert-streaming fields accumulated since ``snap``."""
+        if self.expert is None:
+            return {}
+        return self.expert.stats_since(snap)
+
     def run_single(self, tokens) -> Tuple[jnp.ndarray, RunStats]:
         """Single-pass inference (BERT / ViT workloads)."""
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
+        snap = self._expert_snap()
         t0 = time.perf_counter()
         logits = self._forward_once(jnp.asarray(tokens), ledger, events, t0)
         logits.block_until_ready()
@@ -382,7 +489,8 @@ class PipeloadEngine:
         return logits, RunStats(self.mode, self.m, lat, ledger.peak, events,
                                 loads=sum(1 for e in events
                                           if e[1] == "load_end"),
-                                streamed_bytes=self._streamed(events))
+                                streamed_bytes=self._streamed(events),
+                                **self._expert_stats(snap))
 
     def run_generate(self, tokens, new_tokens: int, *,
                      kv_cache: bool = False
@@ -397,15 +505,27 @@ class PipeloadEngine:
             return self._generate_kv(tokens, new_tokens)
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
+        snap = self._expert_snap()
         toks = jnp.asarray(tokens)
         t0 = time.perf_counter()
         prefill_s = 0.0
+        if self.expert is not None:
+            # re-prefill rounds GROW with every generated token; bind the
+            # expert cache against the widest (last) round up front so an
+            # infeasible budget fails here, not mid-generation
+            b, s0 = toks.shape
+            self._ensure_aux(ledger, events, t0)
+            self._bind_expert(ledger, events, t0,
+                              round_tokens=b * (s0 + new_tokens - 1))
         for step in range(new_tokens):
             if self.mode == "baseline" and step > 0:
                 # baseline keeps the model resident: only re-infer
+                if self.expert is not None:
+                    self.expert.begin_round()
                 x = self.fns["embed"](self._resident["embed"], toks)
-                for name in self.layer_names:
-                    x = self._apply_layer(self._baseline_weights[name], x)
+                for k, name in enumerate(self.layer_names):
+                    x = self._apply_layer(self._baseline_weights[name], x,
+                                          k=k)
                 logits = self.fns["head"](self._resident["head"], x)
             else:
                 logits = self._forward_once(toks, ledger, events, t0)
@@ -421,7 +541,8 @@ class PipeloadEngine:
                                         if e[1] == "load_end"),
                               streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
-                              decode_s=lat - prefill_s)
+                              decode_s=lat - prefill_s,
+                              **self._expert_stats(snap))
 
     # ------------------------------------------------------------------
     def _generate_kv(self, tokens, new_tokens: int
@@ -433,6 +554,7 @@ class PipeloadEngine:
                                                  [], kv_cache=True)
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
+        snap = self._expert_snap()
         toks = jnp.asarray(tokens)
         b, s0 = toks.shape
         total = s0 + new_tokens
@@ -440,7 +562,10 @@ class PipeloadEngine:
         n = len(names)
         per_layer_cache = self.cfg.cache_bytes(b, total)
         cache_total = n * per_layer_cache
-        self._check_kv_budget(cache_total)
+        self._check_kv_budget(
+            cache_total,
+            expert_floor=(self.expert.working_set_bytes(b * s0)
+                          if self.expert is not None else None))
 
         caches: Dict[str, dict] = {}
         t0 = time.perf_counter()
@@ -452,11 +577,12 @@ class PipeloadEngine:
         ledger.acquire(cache_total, lambda: False)
         events.append((time.perf_counter() - t0, "cache_reserve",
                        str(cache_total)))
+        self._bind_expert(ledger, events, t0, round_tokens=b * s0)
         x = self.fns["embed"](self._resident["embed"], toks)
 
         # ---- prefill: pipelined pass that also captures per-layer caches
         def prefill_apply(k, w, h):
-            h, cache = self.fns["layer_cache"](w, h, total)
+            h, cache = self._layer_cache(k, w, h, total)
             h.block_until_ready()
             caches[names[k]] = cache
             events.append((time.perf_counter() - t0, "cache_alloc",
@@ -464,6 +590,8 @@ class PipeloadEngine:
             return h
 
         if self.mode == "baseline":
+            if self.expert is not None:
+                self.expert.begin_round()
             weights = getattr(self, "_baseline_weights", None)
             if weights is None:
                 weights = {}
@@ -492,8 +620,8 @@ class PipeloadEngine:
         # ---- decode: one single-token pipeline round per remaining token
         def decode_apply(pos):
             def apply(k, w, h):
-                h, caches[names[k]] = self.fns["layer_decode"](
-                    w, h, caches[names[k]], pos)
+                h, caches[names[k]] = self._layer_decode(
+                    k, w, h, caches[names[k]], pos)
                 h.block_until_ready()
                 return h
             return apply
@@ -503,6 +631,8 @@ class PipeloadEngine:
             events.append((time.perf_counter() - t0, "token", str(step)))
             x = self.fns["embed"](self._resident["embed"], toks[:, -1:])
             if self.mode == "baseline":
+                if self.expert is not None:
+                    self.expert.begin_round()
                 for k, name in enumerate(names):
                     x = decode_apply(pos)(k, self._baseline_weights[name], x)
             else:
@@ -523,7 +653,8 @@ class PipeloadEngine:
                               streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
-                              cache_bytes=cache_total, kv_cache=True)
+                              cache_bytes=cache_total, kv_cache=True,
+                              **self._expert_stats(snap))
 
     # ------------------------------------------------------------------
     # Continuous-batching rounds (core/scheduler.py drives these)
@@ -567,25 +698,31 @@ class PipeloadEngine:
         def apply_fn(k, w, state):
             dx, pxs = state
             if dx is not None:
-                dx, decode_caches[names[k]] = self.fns["layer_decode"](
-                    w, dx, decode_caches[names[k]], decode_pos)
+                dx, decode_caches[names[k]] = self._layer_decode(
+                    k, w, dx, decode_caches[names[k]], decode_pos)
                 dx.block_until_ready()
             nxt = []
             for i, px in enumerate(pxs):
-                px, cache = self.fns["layer_cache"](w, px, prefill_total)
+                px, cache = self._layer_cache(k, w, px, prefill_total)
                 px.block_until_ready()
                 prefill_caches[i][names[k]] = cache
                 nxt.append(px)
             return dx, nxt
 
         self._ensure_aux(ledger, events, t0)
+        widest = [px.shape[0] * px.shape[1] for px in prefill_xs]
+        if decode_x is not None:
+            widest.append(decode_x.shape[0])
+        self._bind_expert(ledger, events, t0,
+                          round_tokens=max(widest, default=1))
         state = (decode_x, list(prefill_xs))
         dx, pxs = self._run_pipeline(state, ledger, events, t0,
                                      destroy=self.mode == "pipeload",
                                      apply_fn=apply_fn)
         return dx, decode_caches, pxs, prefill_caches
 
-    def _kv_floor(self, cache_total: int) -> int:
+    def _kv_floor(self, cache_total: int, *,
+                  expert_floor: Optional[int] = None) -> int:
         """Smallest budget that cannot deadlock a KV decode round holding
         ``cache_total`` bytes of cache pages: other layers + all pages +
         the pinned window + one streaming layer.  Non-destroying modes
@@ -595,31 +732,47 @@ class PipeloadEngine:
         in-flight request — which is what the scheduler's admission
         control feeds back in before granting a new request its pages."""
         other = sum(s["bytes"] for s in self.shards.values()
-                    if s["kind"] != "layer")
+                    if s["kind"] not in ("layer", "expert"))
         layer_sizes = [self.shards[nm]["bytes"] for nm in self.layer_names]
         if self.mode == "pipeload":
             pinned = sum(layer_sizes[:self.pin])
             streaming = max(layer_sizes[self.pin:], default=0)
         else:
             pinned, streaming = sum(layer_sizes), 0
-        return other + cache_total + pinned + streaming
+        expert = 0
+        if self.expert is not None:
+            # ``expert_floor`` = the workload's shrinkable minimum (the
+            # scheduler's feasibility checks pass it — admission can
+            # evict the cache down to it); otherwise bound sessions hold
+            # the live reservation and pre-run checks use the smallest
+            # cache a single-token round can run with
+            if expert_floor is not None:
+                expert = expert_floor
+            else:
+                expert = (self.expert.reserved if self.expert.bound
+                          else self.expert.min_ws)
+        return other + cache_total + pinned + streaming + expert
 
-    def _check_kv_budget(self, cache_total: int, *, inflight: int = 1):
+    def _check_kv_budget(self, cache_total: int, *, inflight: int = 1,
+                         expert_floor: Optional[int] = None):
         """Raise unless the budget clears the decode floor for the full
         multi-request reservation (``cache_total`` bytes across
         ``inflight`` concurrent requests); below it the pipeline deadlocks
-        with every loader parked on S_stop."""
+        with every loader parked on S_stop.  ``expert_floor`` overrides
+        the expert-cache term with the workload's shrinkable minimum
+        (see ``_kv_floor``)."""
         if self.budget is None:
             return
-        floor = self._kv_floor(cache_total)
+        floor = self._kv_floor(cache_total, expert_floor=expert_floor)
         if self.budget < floor:
             per_req = cache_total // max(inflight, 1)
             raise ValueError(
                 f"budget {self.budget} below the KV decode floor {floor} "
                 f"for {inflight} in-flight request(s) "
                 f"(cache={cache_total} = {inflight} x {per_req} "
-                f"cache-page bytes, plus other layers, the pinned window "
-                f"and one streaming layer); use the generation-aware "
+                f"cache-page bytes, plus other layers, the pinned window, "
+                f"one streaming layer and — for expert-split MoE — the "
+                f"expert cache); use the generation-aware "
                 f"planner (Hermes.plan_generate) to pick a feasible "
                 f"(num_agents, pin_window, max_inflight), or let the "
                 f"scheduler queue the request until pages free up")

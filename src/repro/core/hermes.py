@@ -117,13 +117,15 @@ class Hermes:
     def engine(self, *, mode: str = "pipeload",
                budget_bytes: Optional[int] = None,
                num_agents: Optional[int] = None,
-               pin_window: int = 0) -> PipeloadEngine:
+               pin_window: int = 0,
+               expert_cache_bytes: Optional[int] = None) -> PipeloadEngine:
         if num_agents is None and mode == "pipeload":
             num_agents = self.best_agents(budget_bytes)
         return PipeloadEngine(self.dir, self.cfg, mode=mode,
                               num_agents=num_agents or 1,
                               budget_bytes=budget_bytes,
-                              pin_window=pin_window)
+                              pin_window=pin_window,
+                              expert_cache_bytes=expert_cache_bytes)
 
     def scheduler(self, *, budget_bytes: Optional[int] = None,
                   max_inflight: int = 4, prompt_len: int = 128,
@@ -157,7 +159,8 @@ class Hermes:
                           num_agents=(num_agents if num_agents is not None
                                       else g.num_agents),
                           pin_window=(pin_window if pin_window is not None
-                                      else g.pin_window))
+                                      else g.pin_window),
+                          expert_cache_bytes=(g.expert_cache_bytes or None))
         return BatchScheduler(eng, max_inflight=g.inflight,
                               max_total_len=(max_total_len
                                              or prompt_len + new_tokens))
@@ -167,6 +170,7 @@ class Hermes:
                 num_agents: Optional[int] = None,
                 pin_window: Optional[int] = None,
                 kv_cache: bool = False) -> RunStats:
+        expert_cache = None
         if (kv_cache and generate and mode == "pipeload"
                 and (num_agents is None or pin_window is None)):
             # generation-aware tier picks (num_agents, pin_window) jointly
@@ -182,9 +186,11 @@ class Hermes:
                     f"batch/prompt/new_tokens")
             num_agents = g.num_agents if num_agents is None else num_agents
             pin_window = g.pin_window if pin_window is None else pin_window
+            expert_cache = g.expert_cache_bytes or None
         eng = self.engine(mode=mode, budget_bytes=budget_bytes,
                           num_agents=num_agents,
-                          pin_window=pin_window or 0)
+                          pin_window=pin_window or 0,
+                          expert_cache_bytes=expert_cache)
         if generate:
             _, stats = eng.run_generate(tokens, generate, kv_cache=kv_cache)
         else:

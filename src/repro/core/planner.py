@@ -23,6 +23,20 @@ continuous-batching dimension: KV pages scale with the in-flight count
 while the weight stream does not, so the optimal
 ``(num_agents, pin_window, inflight)`` triple changes with the budget.
 
+Expert-split MoE profiles (``expert_split`` + per-expert byte/latency
+figures from the Layer Profiler) add a third search dimension: the
+**ExpertCache size**.  The round model is analytic-on-top-of-simulated:
+``expected_unique_experts(n_experts, top_k, tokens)`` gives the expected
+per-layer union a round demand-loads (exact under uniform independent
+top-k routing: ``E * (1 - ((E-k)/E)^T)``), a first-order LRU model turns
+cache bytes into a hit rate (the cached fraction of the ``L*E`` expert
+pool), and the resulting expected miss-fetch time is folded into each
+layer's compute time — expert fetches ride the Inference Agent's path,
+after the router — before the discrete-event ``simulate`` replays the
+round.  ``plan_generate`` then searches cache size jointly with
+``(num_agents, pin_window, inflight, dtype)``; the winning entry's
+``expert_cache_bytes`` sizes the engine's reservation.
+
 Both ``plan`` and ``plan_generate`` also search over shard *dtype*: pass
 ``{"fp32": profile, "int8": profile, ...}`` (one Layer Profiler run per
 quantized variant of the checkpoint — per-dtype ``t_load``/``bytes`` are
@@ -72,6 +86,7 @@ class GenPlanEntry:
     inflight: int = 1                 # concurrent requests in the batch
     predicted_throughput_tps: float = 0.0  # inflight tokens / decode round
     dtype: Optional[str] = None       # shard dtype when searching over quant
+    expert_cache_bytes: int = 0       # ExpertCache size (expert-split MoE)
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +260,9 @@ def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
     predicts identical round latency for every pin that hides the first
     load, yet each unpinned layer still costs a real disk read per
     decode round; the simulator's objective is blind to that traffic, so
-    the tie-break is where "stream as few bytes as possible" lives."""
+    the tie-break is where "stream as few bytes as possible" lives.  A
+    remaining tie goes to the bigger expert cache — same argument, for
+    demand-loaded expert shards."""
     if best is None:
         return True
     if cand.feasible != best.feasible:
@@ -256,7 +273,9 @@ def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
     tol = 1e-6 * max(a, b, 1e-12)
     if abs(a - b) > tol:
         return a < b
-    return cand.pin_window > best.pin_window
+    if cand.pin_window != best.pin_window:
+        return cand.pin_window > best.pin_window
+    return cand.expert_cache_bytes > best.expert_cache_bytes
 
 
 def plan(profile, budgets: List[Optional[int]],
@@ -291,6 +310,76 @@ def plan(profile, budgets: List[Optional[int]],
                     best = cand
         entries.append(best)
     return entries
+
+
+# ---------------------------------------------------------------------------
+# Expert-streaming round model (expert-split MoE profiles)
+# ---------------------------------------------------------------------------
+def expected_unique_experts(n_experts: int, top_k: int,
+                            tokens: int) -> float:
+    """Expected per-layer count of DISTINCT experts a round's batch
+    activates.  Exact under uniform independent routing: each token
+    picks a top-k set uniformly, so P(expert untouched by one token) =
+    (E-k)/E and E[unique] = E * (1 - ((E-k)/E)^T)."""
+    if n_experts <= 0 or top_k <= 0 or tokens <= 0:
+        return 0.0
+    return n_experts * (1.0 - ((n_experts - top_k) / n_experts) ** tokens)
+
+
+def expert_hit_rate_model(cache_bytes: int, expert_bytes: int,
+                          n_layers: int, n_experts: int) -> float:
+    """First-order LRU hit model: under near-uniform routing the chance
+    a needed expert is resident ≈ the cached fraction of the L*E expert
+    pool (saturating at 1 when everything fits)."""
+    pool = n_layers * n_experts * expert_bytes
+    if pool <= 0 or cache_bytes <= 0:
+        return 0.0
+    return min(1.0, cache_bytes / pool)
+
+
+def _slim_profile(prof: Dict) -> Dict:
+    """Copy without the per-expert shard rows (simulate only reads layer
+    rows; the expert aggregates stay at the top level)."""
+    out = {k: v for k, v in prof.items() if k != "shards"}
+    out["shards"] = [dict(s) for s in prof["shards"]
+                     if s["kind"] != "expert"]
+    return out
+
+
+def _moe_stream_profile(slim: Dict, *, tokens: int, cache_bytes: int,
+                        m: int, batch: int, key: str) -> Dict:
+    """Derive a profile whose per-layer ``key`` time includes the round's
+    expected expert demand-loads: ``unique * miss_rate`` shards fetched
+    on ``m`` parallel workers, on the Inference Agent's path (after the
+    router).  ``simulate`` scales compute by ``batch``, and the union is
+    already a whole-round quantity, so the extra is pre-divided."""
+    e, k = slim["n_experts"], slim["top_k"]
+    u = expected_unique_experts(e, k, tokens)
+    hit = expert_hit_rate_model(cache_bytes, slim["expert_bytes"],
+                                slim["num_layers"], e)
+    extra = (u * (1.0 - hit) * slim["expert_t_load"]
+             / max(m, 1) / max(batch, 1))
+    out = copy.deepcopy(slim)
+    for s in out["shards"]:
+        if s["kind"] == "layer":
+            s[key] = s.get(key, s["t_comp"]) + extra
+    return out
+
+
+def _expert_cache_grid(slim: Dict, batch: int, seq: int) -> List[int]:
+    """Candidate ExpertCache sizes: the worst-case per-layer union (the
+    smallest cache a round can run with — prefill may touch every expert
+    of a layer at once), doublings of it, and the whole expert pool."""
+    e, k = slim["n_experts"], slim["top_k"]
+    eb = slim["expert_bytes"]
+    total = slim["num_layers"] * e * eb
+    c = min(e, max(batch * seq, 1) * k) * eb
+    grid = []
+    while c < total:
+        grid.append(int(c))
+        c *= 2
+    grid.append(int(total))
+    return grid
 
 
 # ---------------------------------------------------------------------------
@@ -344,46 +433,73 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     rounds = max(new_tokens - 1, 0)
 
     def best_at(label, prof, budget, r: int) -> Optional[GenPlanEntry]:
-        """Best (m, pin) candidate with ``r`` requests in flight."""
+        """Best (m, pin[, expert cache]) candidate with ``r`` requests in
+        flight."""
         n = prof["num_layers"]
         lb = prof["layer_bytes"]
         other = prof["other_bytes"]
         max_m = max_agents or min(n, 12)
         pin_cap = n if max_pin is None else min(max_pin, n)
         cache_total = n * cache_bytes_per_layer * r
+        moe = bool(prof.get("expert_split"))
+        seq = max(int(prof.get("seq", 1)), 1)
+        slim = _slim_profile(prof) if moe else prof
+        cache_opts = (_expert_cache_grid(slim, r, seq) if moe else [0])
         best: Optional[GenPlanEntry] = None
-        for pin in range(pin_cap + 1):
-            # tier 1: analytic feasibility prunes the (m, pin) grid
-            ms = [m for m in range(1, max_m + 1)
-                  if budget is None
-                  or analytic_peak(m, lb, other, cache_bytes=cache_total,
-                                   pin_window=pin, n_layers=n) <= budget]
-            if not ms:
-                ms = [1] if pin == 0 else []    # keep one fallback candidate
-            for m in ms:
-                # tier 2: pre-run both round shapes.  The prefill round
-                # loads every layer but RETAINS the pinned prefix (the
-                # engine never destroys it), so it is pin-dependent too.
-                pre_lat, pre_peak = simulate(
-                    prof, m, budget, retain_window=pin,
-                    extra_resident_bytes=cache_total, batch=r)
-                dec_lat, dec_peak = simulate(
-                    prof, m, budget, pin_window=pin,
-                    extra_resident_bytes=cache_total,
-                    t_comp_key="t_decode", batch=r)
-                total = pre_lat + rounds * dec_lat
-                peak = max(pre_peak, dec_peak)
-                ok = math.isfinite(total) and (budget is None
-                                               or peak <= budget)
-                tput = r / dec_lat if (dec_lat and math.isfinite(dec_lat)) \
-                    else 0.0
-                cand = GenPlanEntry(budget, m, pin, total, pre_lat, dec_lat,
-                                    int(peak), cache_total, ok,
-                                    inflight=r,
-                                    predicted_throughput_tps=tput,
-                                    dtype=label)
-                if _gen_better(cand, best):
-                    best = cand
+        for cbytes in cache_opts:
+            resident = cache_total + cbytes
+            derived = {}   # (pre_prof, dec_prof) per m — pin-independent
+            for pin in range(pin_cap + 1):
+                # tier 1: analytic feasibility prunes the (m, pin) grid
+                ms = [m for m in range(1, max_m + 1)
+                      if budget is None
+                      or analytic_peak(m, lb, other, cache_bytes=resident,
+                                       pin_window=pin, n_layers=n)
+                      <= budget]
+                if not ms:
+                    # keep one fallback candidate per budget
+                    ms = [1] if pin == 0 and cbytes == cache_opts[0] else []
+                for m in ms:
+                    # tier 2: pre-run both round shapes.  The prefill
+                    # round loads every layer but RETAINS the pinned
+                    # prefix (the engine never destroys it), so it is
+                    # pin-dependent too.  Expert-split MoE rounds fold
+                    # the expected demand-load time into compute —
+                    # prefill runs cold (cache_bytes=0), decode at the
+                    # candidate cache's modelled hit rate.
+                    if moe:
+                        if m not in derived:
+                            derived[m] = (
+                                _moe_stream_profile(
+                                    slim, tokens=r * seq, cache_bytes=0,
+                                    m=m, batch=r, key="t_comp"),
+                                _moe_stream_profile(
+                                    slim, tokens=r, cache_bytes=cbytes,
+                                    m=m, batch=r, key="t_decode"))
+                        pre_prof, dec_prof = derived[m]
+                    else:
+                        pre_prof = dec_prof = prof
+                    pre_lat, pre_peak = simulate(
+                        pre_prof, m, budget, retain_window=pin,
+                        extra_resident_bytes=resident, batch=r)
+                    dec_lat, dec_peak = simulate(
+                        dec_prof, m, budget, pin_window=pin,
+                        extra_resident_bytes=resident,
+                        t_comp_key="t_decode", batch=r)
+                    total = pre_lat + rounds * dec_lat
+                    peak = max(pre_peak, dec_peak)
+                    ok = math.isfinite(total) and (budget is None
+                                                   or peak <= budget)
+                    tput = r / dec_lat \
+                        if (dec_lat and math.isfinite(dec_lat)) else 0.0
+                    cand = GenPlanEntry(budget, m, pin, total, pre_lat,
+                                        dec_lat, int(peak), cache_total,
+                                        ok, inflight=r,
+                                        predicted_throughput_tps=tput,
+                                        dtype=label,
+                                        expert_cache_bytes=cbytes)
+                    if _gen_better(cand, best):
+                        best = cand
         return best
 
     entries: List[GenPlanEntry] = []

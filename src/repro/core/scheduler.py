@@ -85,10 +85,22 @@ class ServeStats:
     max_inflight_seen: int
     cache_bytes_peak: int
     events: List[Tuple[float, str, str]]
+    # expert-streaming extras (0 for dense / whole-layer MoE serving)
+    expert_hits: int = 0
+    expert_misses: int = 0
+    expert_evictions: int = 0
+    expert_cache_bytes: int = 0
+    unique_experts_per_round: float = 0.0
 
     @property
     def tokens_per_s(self) -> float:
         return self.new_tokens / self.latency_s if self.latency_s else 0.0
+
+    @property
+    def expert_hit_rate(self) -> float:
+        """Fraction of expert activations served from the ExpertCache."""
+        total = self.expert_hits + self.expert_misses
+        return self.expert_hits / total if total else 0.0
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -129,6 +141,14 @@ class BatchScheduler:
         self._max_seen = 0
         self._per_req_cache = (len(engine.layer_names)
                                * engine.cfg.cache_bytes(1, max_total_len))
+        self._expert_snap = (engine.expert.snapshot()
+                             if engine.expert is not None else None)
+        # the widest fetch this workload can lock (a max-length prompt's
+        # prefill): admission may shrink the ExpertCache to this, never
+        # below, and submit-time feasibility reasons from it
+        self._expert_floor = (
+            engine.expert.working_set_bytes(max_total_len)
+            if engine.expert is not None else None)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -148,7 +168,8 @@ class BatchScheduler:
                 f"prompt ({len(prompt)}) + max_new_tokens "
                 f"({max_new_tokens}) exceeds max_total_len "
                 f"{self.max_total_len}")
-        self.engine._check_kv_budget(self._per_req_cache, inflight=1)
+        self.engine._check_kv_budget(self._per_req_cache, inflight=1,
+                                     expert_floor=self._expert_floor)
         req = Request(self._next_rid, prompt, max_new_tokens,
                       arrival_round=max(arrival_round, 0),
                       cache_bytes=self._per_req_cache)
@@ -160,11 +181,30 @@ class BatchScheduler:
     # ------------------------------------------------------------------
     def _fits(self, extra_cache: int) -> bool:
         """Would the decode floor still clear the budget after granting
-        ``extra_cache`` more page bytes?"""
-        if self.engine.budget is None:
+        ``extra_cache`` more page bytes?  When the floor misses only
+        because the ExpertCache holds the headroom, the cache shrinks
+        first (LRU eviction releasing ledger bytes — the cache-side
+        ``S_dest``), so a queued request's pages win over cold experts."""
+        eng = self.engine
+        if eng.budget is None:
             return True
-        floor = self.engine._kv_floor(self._cache_resident + extra_cache)
-        return floor <= self.engine.budget
+        # until the expert engine is bound to THIS session's ledger the
+        # live-reservation term does not exist (a binding left over from
+        # an earlier run charged a dead ledger): reason from the
+        # workload's expert floor so early admissions leave room for the
+        # cache's minimum working set
+        pre_bind = (eng.expert is not None
+                    and not eng.expert.bound_to(self.ledger))
+        kw = {"expert_floor": self._expert_floor} if pre_bind else {}
+        floor = eng._kv_floor(self._cache_resident + extra_cache, **kw)
+        if floor <= eng.budget:
+            return True
+        if eng.expert is not None and not pre_bind:
+            if eng.expert.release_headroom(floor - eng.budget,
+                                           floor=self._expert_floor):
+                floor = eng._kv_floor(self._cache_resident + extra_cache)
+                return floor <= eng.budget
+        return False
 
     def _admit(self) -> List[Request]:
         """FIFO admission at the current boundary.  Strict head-of-line:
@@ -306,13 +346,18 @@ class BatchScheduler:
         lat = time.perf_counter() - t_start
         outs = {rid: np.asarray(r.tokens)
                 for rid, r in sorted(self.done.items())}
+        expert_kw = {}
+        if self.engine.expert is not None:
+            expert_kw = self.engine.expert.stats_since(self._expert_snap)
+            self._expert_snap = self.engine.expert.snapshot()
         stats = ServeStats(
             rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
             loads=sum(1 for e in self.events if e[1] == "load_end"),
             streamed_bytes=self.engine._streamed(self.events),
             new_tokens=sum(r.generated for r in self.done.values()),
             requests=len(self.done), max_inflight_seen=self._max_seen,
-            cache_bytes_peak=self._cache_peak, events=self.events)
+            cache_bytes_peak=self._cache_peak, events=self.events,
+            **expert_kw)
         return outs, stats
 
     # ------------------------------------------------------------------
@@ -330,16 +375,19 @@ class BatchScheduler:
         T = self.max_total_len
         for s in sorted(set(int(p) for p in prompt_lens)):
             x = fns["embed"](emb, jnp.zeros((1, s), jnp.int32))
-            px, _ = fns["layer_cache"](w0, x, T)
+            px, _ = eng._layer_cache(0, w0, x, T)
             fns["head"](head, px).block_until_ready()
         x1 = fns["embed"](emb, jnp.zeros((1, 1), jnp.int32))
-        _, c1 = fns["layer_cache"](w0, x1, T)
+        _, c1 = eng._layer_cache(0, w0, x1, T)
         for r in range(1, self.max_inflight + 1):
             cr = jax.tree.map(lambda a: jnp.concatenate([a] * r), c1)
             xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
-            dr, _ = fns["layer_decode"](w0, xr, cr,
-                                        jnp.zeros((r,), jnp.int32))
+            dr, _ = eng._layer_decode(0, w0, xr, cr,
+                                      jnp.zeros((r,), jnp.int32))
             fns["head"](head, dr).block_until_ready()
         del w0, emb, head
+        if eng.expert is not None:
+            # warmup's compile-time fetches are not serving traffic
+            self._expert_snap = eng.expert.snapshot()
         self._t0 = time.perf_counter()
         return self

@@ -21,6 +21,14 @@ bytes streamed and resident per layer — deeper pin windows and more
 in-flight requests under the same budget); ``--quant auto`` profiles
 every dtype and lets the planner pick shard precision jointly with
 ``(num_agents, pin_window, inflight)``.
+
+MoE architectures (e.g. ``--arch qwen3_moe_30b_a3b``) are partitioned
+expert-split and served through the expert-streaming subsystem
+(core/expert_stream.py): attention+router shards stream eagerly, the
+round's activated experts are demand-loaded after the router runs, and
+the planner sizes the ExpertCache jointly with the rest of the
+schedule.  The summary line reports the expert hit rate and per-round
+unique-expert count.
 """
 from __future__ import annotations
 
@@ -32,7 +40,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import partition_and_save
-from repro.configs import get_config
+from repro.configs import get, names
 from repro.core import BatchScheduler, Hermes
 from repro.models.api import build_model
 
@@ -67,7 +75,7 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         arrival_rate: float | None = None, seed: int = 0,
         quant: str = "fp32"):
     assert quant in QUANT_CHOICES, quant
-    cfg = get_config(arch)
+    cfg = get(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
     ckpt = ensure_checkpoint(cfg)
@@ -121,10 +129,13 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"pin={pin}, inflight={g.inflight}, dtype={g.dtype}, predicted "
           f"{g.predicted_throughput_tps:.1f} tok/s aggregate, peak "
           f"{g.predicted_peak_bytes/2**20:.0f}MB "
-          f"(cache {g.cache_bytes/2**20:.1f}MB)")
+          f"(cache {g.cache_bytes/2**20:.1f}MB"
+          + (f", expert cache {g.expert_cache_bytes/2**20:.1f}MB"
+             if g.expert_cache_bytes else "") + ")")
 
     eng = hermes.engine(mode="pipeload", budget_bytes=budget,
-                        num_agents=agents, pin_window=pin)
+                        num_agents=agents, pin_window=pin,
+                        expert_cache_bytes=g.expert_cache_bytes or None)
     sched = BatchScheduler(eng, max_inflight=g.inflight,
                            max_total_len=prompt_len + new_tokens)
     sched.warmup(prompt_lens=[prompt_len])
@@ -142,6 +153,13 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"{stats.loads} shard loads "
           f"({stats.streamed_bytes/2**20:.0f}MB streamed), "
           f"max inflight seen {stats.max_inflight_seen}")
+    if eng.expert is not None:
+        print(f"  expert stream: hit rate {stats.expert_hit_rate:.0%} "
+              f"({stats.expert_hits} hits / {stats.expert_misses} loads, "
+              f"{stats.expert_evictions} evictions), "
+              f"{stats.unique_experts_per_round:.1f} unique "
+              f"(layer, expert) activations/round, cache "
+              f"{stats.expert_cache_bytes/2**20:.1f}MB")
     for rid, req in sorted(sched.done.items()):
         print(f"  req{rid}: arrived r{req.arrival_round} admitted "
               f"r{req.admitted_round} finished r{req.finished_round}")
@@ -150,7 +168,10 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gpt2_base")
+    ap.add_argument("--arch", default="gpt2_base", choices=names(),
+                    type=lambda a: a.replace("-", "_").replace(".", "_"),
+                    help="architecture id from the config registry "
+                    "(dashes/dots tolerated)")
     ap.add_argument("--budget-mb", type=float, default=None)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
