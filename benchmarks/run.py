@@ -26,6 +26,7 @@ BENCHES = {
     "fig7": "benchmarks.bench_fig7_constraints",
     "decode": "benchmarks.bench_decode",
     "batch_decode": "benchmarks.bench_batch_decode",
+    "prefix": "benchmarks.bench_prefix",
     "quant": "benchmarks.bench_quant",
     "moe": "benchmarks.bench_moe_stream",
     "roofline": "benchmarks.bench_roofline",

@@ -7,6 +7,8 @@ from repro.core.engine import MODES, PipeloadEngine, RunStats  # noqa: F401
 from repro.core.expert_stream import (ExpertCache,  # noqa: F401
                                       ExpertStreamEngine)
 from repro.core.hermes import Hermes  # noqa: F401
+from repro.core.kv_pages import (BlockTable, PagePool,  # noqa: F401
+                                 PrefixTree, pages_for)
 from repro.core.planner import (GenPlanEntry, PlanEntry,  # noqa: F401
                                 analytic_latency, expected_unique_experts,
                                 plan, plan_generate, simulate)

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.partition import load_manifest, load_shard
+from repro.core.kv_pages import pages_for
 from repro.core.modules import build_module_fns
 from repro.models.config import ModelConfig
 
@@ -148,7 +149,8 @@ class PipeloadEngine:
                  mode: str = "pipeload", num_agents: int = 4,
                  budget_bytes: Optional[int] = None, pin_window: int = 0,
                  attn_impl: Optional[str] = "auto",
-                 expert_cache_bytes: Optional[int] = None):
+                 expert_cache_bytes: Optional[int] = None,
+                 page_size: Optional[int] = None):
         assert mode in MODES, mode
         self.dir = Path(ckpt_dir)
         self.cfg = cfg
@@ -156,6 +158,10 @@ class PipeloadEngine:
         self.m = max(1, num_agents) if mode == "pipeload" else 1
         self.budget = budget_bytes
         self.pin = pin_window if mode == "pipeload" else 0
+        # paged KV (core/kv_pages.py): cache ledger bytes are charged in
+        # page_size-token pages as positions are reached, instead of one
+        # max-length reservation up front.  None = dense reservation.
+        self.page_size = page_size if page_size and page_size > 0 else None
         self.manifest = load_manifest(ckpt_dir)
         self.fns = build_module_fns(cfg, attn_impl=attn_impl)
         self.shards = {s["name"]: s for s in self.manifest["shards"]}
@@ -560,23 +566,54 @@ class PipeloadEngine:
         total = s0 + new_tokens
         names = self.layer_names
         n = len(names)
-        per_layer_cache = self.cfg.cache_bytes(b, total)
-        cache_total = n * per_layer_cache
-        self._check_kv_budget(
-            cache_total,
-            expert_floor=(self.expert.working_set_bytes(b * s0)
-                          if self.expert is not None else None))
+        expert_floor = (self.expert.working_set_bytes(b * s0)
+                        if self.expert is not None else None)
+        # Paged accounting (core/kv_pages.py): charge the ledger one
+        # page at a time as decode reaches new positions, instead of
+        # the whole max-length block up front — the ledger peak tracks
+        # pages actually mapped.  Feasibility still checks the final
+        # page count (a single request cannot be preempted
+        # mid-generation; the scheduler path can).  Expert-split MoE
+        # keeps the dense up-front reservation: _bind_expert sizes the
+        # ExpertCache from the ledger headroom at bind time, so decode
+        # pages mapped LATER would find their bytes already handed to
+        # the cache and park ensure_slots on S_stop forever.
+        paged = bool(self.page_size) and self.expert is None
+        if paged:
+            ps = self.page_size
+            cache_total = (pages_for(total, ps)
+                           * n * self.cfg.cache_bytes(b, ps))
+        else:
+            cache_total = n * self.cfg.cache_bytes(b, total)
+        self._check_kv_budget(cache_total, expert_floor=expert_floor)
 
         caches: Dict[str, dict] = {}
         t0 = time.perf_counter()
         self._ensure_aux(ledger, events, t0)
-        # Reserve ALL cache pages up front: the Inference Agent raises
-        # S_dest, so letting it block on S_stop mid-pipeline would deadlock;
-        # the floor check above guarantees this acquire never waits, and
-        # loaders then see the correct streaming headroom from round one.
-        ledger.acquire(cache_total, lambda: False)
-        events.append((time.perf_counter() - t0, "cache_reserve",
-                       str(cache_total)))
+        # Reserve the cache bytes the NEXT round needs before its
+        # pipeline starts: the Inference Agent raises S_dest, so letting
+        # it block on S_stop mid-pipeline would deadlock; the floor
+        # check above guarantees these boundary acquires never wait, and
+        # loaders then see the correct streaming headroom each round.
+        # Dense reservations grab everything here; paged runs grow
+        # page-by-page via ensure_slots().
+        mapped = {"bytes": 0}
+
+        def ensure_slots(slots: int):
+            """Grow the charged reservation to cover ``slots`` cache
+            positions (rounded up to pages when paged)."""
+            if paged:
+                need = (pages_for(slots, self.page_size)
+                        * n * self.cfg.cache_bytes(b, self.page_size))
+            else:
+                need = cache_total
+            if need > mapped["bytes"]:
+                ledger.acquire(need - mapped["bytes"], lambda: False)
+                events.append((time.perf_counter() - t0, "cache_reserve",
+                               str(need - mapped["bytes"])))
+                mapped["bytes"] = need
+
+        ensure_slots(s0 if paged else total)
         self._bind_expert(ledger, events, t0, round_tokens=b * s0)
         x = self.fns["embed"](self._resident["embed"], toks)
 
@@ -628,6 +665,7 @@ class PipeloadEngine:
 
         for step in range(1, new_tokens):
             pos = s0 + step - 1          # cache slot of the token we feed
+            ensure_slots(pos + 1)        # paged: map the write page
             events.append((time.perf_counter() - t0, "token", str(step)))
             x = self.fns["embed"](self._resident["embed"], toks[:, -1:])
             if self.mode == "baseline":
@@ -645,15 +683,15 @@ class PipeloadEngine:
 
         toks.block_until_ready()
         lat = time.perf_counter() - t0
-        caches.clear()                   # free cache pages ...
-        ledger.release(cache_total)      # ... and return them to the budget
+        caches.clear()                    # free cache pages ...
+        ledger.release(mapped["bytes"])   # ... and return them to the budget
         return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
                               loads=sum(1 for e in events
                                         if e[1] == "load_end"),
                               streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
-                              cache_bytes=cache_total, kv_cache=True,
+                              cache_bytes=mapped["bytes"], kv_cache=True,
                               **self._expert_stats(snap))
 
     # ------------------------------------------------------------------
@@ -662,7 +700,9 @@ class PipeloadEngine:
     def run_batch_round(self, ledger: _Ledger, events, t0, *,
                         decode_x=None, decode_caches: Optional[Dict] = None,
                         decode_pos=None, prefill_xs=(),
-                        prefill_total: int = 0):
+                        prefill_total: int = 0,
+                        paged_pools: Optional[Dict] = None,
+                        decode_tables=None):
         """ONE pipeline round shared by every in-flight request.
 
         The §III machinery (loading agents, S_comp/S_dest/S_stop, in-order
@@ -683,6 +723,14 @@ class PipeloadEngine:
         per request.  The caller owns ``ledger``/``events``/``t0`` so
         accounting spans the serving session, not a single call.
 
+        Paged serving (core/kv_pages.py) passes ``paged_pools`` — per
+        layer, cache dicts with ``(P, page, ...)`` leaves — plus the
+        stacked ``decode_tables`` (R, NB) block tables; the decode step
+        then runs ``layer_decode_paged`` (Pallas block-table gather
+        under ``attn_impl="pallas"``) and the pools are returned in the
+        caches slot.  Prefill jobs are unchanged either way: the caller
+        scatters their captured caches into pages at the boundary.
+
         Returns ``(decode_x', decode_caches', prefill_outs,
         prefill_caches)`` — the advanced decode states and, per prefill
         job, its final hidden states and captured per-layer caches.
@@ -692,12 +740,22 @@ class PipeloadEngine:
                 "run_batch_round needs a pipelined mode (pipeload / "
                 "pipeswitch); baseline keeps the model resident and has "
                 "no round to amortise")
+        if paged_pools is not None and self.expert is not None:
+            raise ValueError(
+                "paged KV serving is not supported with expert-split "
+                "MoE checkpoints yet; repartition whole-layer or drop "
+                "page_size")
         names = self.layer_names
         prefill_caches: List[Dict[str, dict]] = [{} for _ in prefill_xs]
 
         def apply_fn(k, w, state):
             dx, pxs = state
-            if dx is not None:
+            if dx is not None and paged_pools is not None:
+                dx, paged_pools[names[k]] = self.fns["layer_decode_paged"](
+                    w, dx, paged_pools[names[k]], decode_tables,
+                    decode_pos)
+                dx.block_until_ready()
+            elif dx is not None:
                 dx, decode_caches[names[k]] = self._layer_decode(
                     k, w, dx, decode_caches[names[k]], decode_pos)
                 dx.block_until_ready()
@@ -719,7 +777,8 @@ class PipeloadEngine:
         dx, pxs = self._run_pipeline(state, ledger, events, t0,
                                      destroy=self.mode == "pipeload",
                                      apply_fn=apply_fn)
-        return dx, decode_caches, pxs, prefill_caches
+        caches_out = paged_pools if paged_pools is not None else decode_caches
+        return dx, caches_out, pxs, prefill_caches
 
     def _kv_floor(self, cache_total: int, *,
                   expert_floor: Optional[int] = None) -> int:

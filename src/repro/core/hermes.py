@@ -98,34 +98,44 @@ class Hermes:
                       max_agents: Optional[int] = None,
                       max_pin: Optional[int] = None,
                       max_inflight: int = 1,
-                      quants: Optional[Sequence[Optional[str]]] = None
-                      ) -> List[GenPlanEntry]:
+                      quants: Optional[Sequence[Optional[str]]] = None,
+                      page_sizes: Sequence[int] = (),
+                      shared_prefix_len: int = 0) -> List[GenPlanEntry]:
         """Generation-aware schedule: joint (num_agents, pin_window) with
         KV-cache bytes charged against the budget.  ``max_inflight > 1``
         additionally searches the continuous-batching in-flight count
         (capacity-first; see ``planner.plan_generate``); ``quants``
         widens the search over shard dtype (KV pages keep the model
-        dtype, so ``cache_bytes_per_layer`` is shared)."""
+        dtype, so ``cache_bytes_per_layer`` is shared); ``page_sizes``
+        widens it over PAGED KV reservations (core/kv_pages.py) —
+        ``shared_prefix_len`` tells the model how many leading prompt
+        tokens the workload's requests share, whose full pages are
+        charged once across the batch."""
         cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
         prof = (self.profile() if quants is None
                 else self._quant_profiles(quants, batch=1, seq=prompt_len))
         return plan_generate(prof, budgets, new_tokens=new_tokens,
                              cache_bytes_per_layer=cb, max_agents=max_agents,
-                             max_pin=max_pin, max_inflight=max_inflight)
+                             max_pin=max_pin, max_inflight=max_inflight,
+                             page_sizes=tuple(page_sizes),
+                             total_len=prompt_len + new_tokens,
+                             shared_prefix_len=shared_prefix_len)
 
     # ---- Execution Engine ----------------------------------------------
     def engine(self, *, mode: str = "pipeload",
                budget_bytes: Optional[int] = None,
                num_agents: Optional[int] = None,
                pin_window: int = 0,
-               expert_cache_bytes: Optional[int] = None) -> PipeloadEngine:
+               expert_cache_bytes: Optional[int] = None,
+               page_size: Optional[int] = None) -> PipeloadEngine:
         if num_agents is None and mode == "pipeload":
             num_agents = self.best_agents(budget_bytes)
         return PipeloadEngine(self.dir, self.cfg, mode=mode,
                               num_agents=num_agents or 1,
                               budget_bytes=budget_bytes,
                               pin_window=pin_window,
-                              expert_cache_bytes=expert_cache_bytes)
+                              expert_cache_bytes=expert_cache_bytes,
+                              page_size=page_size)
 
     def scheduler(self, *, budget_bytes: Optional[int] = None,
                   max_inflight: int = 4, prompt_len: int = 128,
@@ -133,20 +143,31 @@ class Hermes:
                   num_agents: Optional[int] = None,
                   pin_window: Optional[int] = None,
                   max_total_len: Optional[int] = None,
-                  quants: Optional[Sequence[Optional[str]]] = None
-                  ) -> "BatchScheduler":
+                  quants: Optional[Sequence[Optional[str]]] = None,
+                  page_sizes: Sequence[int] = (),
+                  shared_prefix_len: int = 0,
+                  prefix_cache: bool = True,
+                  seed: Optional[int] = None) -> "BatchScheduler":
         """Continuous-batching serving facade: plan the
         (num_agents, pin_window, inflight) triple for the budget, build
         the engine, and wrap it in a ``BatchScheduler`` ready for
         ``submit()``/``run()``.  ``prompt_len``/``new_tokens`` describe
         the TYPICAL request (they size the padded cache reservation);
         per-request lengths may vary below ``max_total_len``.
-        ``quants`` widens the plan over shard dtype; the engine is built
-        on the winning checkpoint variant."""
+        ``quants`` widens the plan over shard dtype and ``page_sizes``
+        over paged KV reservations (``shared_prefix_len`` models the
+        workload's common prompt prefix); the engine is built on the
+        winning checkpoint variant with the winning page size."""
         from repro.core.scheduler import BatchScheduler
         g = self.plan_generate([budget_bytes], prompt_len=prompt_len,
                                new_tokens=new_tokens,
-                               max_inflight=max_inflight, quants=quants)[0]
+                               max_inflight=max_inflight, quants=quants,
+                               page_sizes=page_sizes,
+                               # sharing off -> every page is private;
+                               # the plan must not assume prefix hits
+                               shared_prefix_len=(shared_prefix_len
+                                                  if prefix_cache
+                                                  else 0))[0]
         if not g.feasible:
             raise ValueError(
                 f"no feasible serving schedule for budget {budget_bytes}: "
@@ -160,10 +181,12 @@ class Hermes:
                                       else g.num_agents),
                           pin_window=(pin_window if pin_window is not None
                                       else g.pin_window),
-                          expert_cache_bytes=(g.expert_cache_bytes or None))
+                          expert_cache_bytes=(g.expert_cache_bytes or None),
+                          page_size=(g.page_size or None))
         return BatchScheduler(eng, max_inflight=g.inflight,
                               max_total_len=(max_total_len
-                                             or prompt_len + new_tokens))
+                                             or prompt_len + new_tokens),
+                              prefix_cache=prefix_cache, seed=seed)
 
     def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
                 budget_bytes: Optional[int] = None,

@@ -52,7 +52,8 @@ import jax.numpy as jnp
 from repro.checkpoint import quant as qz
 from repro.models import attention as attn
 from repro.models import common, moe
-from repro.models.dense_lm import layer_decode, layer_prefill
+from repro.models.dense_lm import (layer_decode, layer_decode_paged,
+                                   layer_prefill)
 from repro.models.config import DENSE, MOE, VLM, ModelConfig
 
 # Families the PIPELOAD engine can execute at shard granularity.  The
@@ -139,6 +140,44 @@ def build_module_fns(cfg: ModelConfig,
                                       attn_impl=impl)
         return out, new_cache
 
+    # Paged KV decode (core/kv_pages.py): cache leaves live in fixed-size
+    # page pools (P, page, ...) and each request's logical sequence is a
+    # block table of page ids.  GQA without a sliding window takes the
+    # dedicated path (Pallas block-table kernel under impl="pallas", no
+    # densified gather); everything else (MLA, windows) gathers the
+    # row's pages into the logically contiguous cache — bit-identical to
+    # the dense decode over the same padded length — runs the ordinary
+    # layer_decode, and scatters the one written row back into its page.
+    gqa_paged = cfg.attention != "mla" and cfg.sliding_window is None
+
+    @jax.jit
+    def layer_decode_paged_apply(weights, x, pools, tables, pos):
+        """One token per request against the paged cache.  ``pools`` is
+        this layer's cache dict with (P, page, ...) leaves; ``tables``
+        (B, NB) int32 block tables (pad short rows with page 0);
+        ``pos`` (B,) ragged write positions.  The write page must be
+        private (the scheduler copy-on-writes shared pages first)."""
+        weights = qz.dequant_tree(weights)
+        b, nb = tables.shape
+        posv = jnp.asarray(pos, jnp.int32).reshape(b)
+        if gqa_paged:
+            return layer_decode_paged(weights, x, cfg, pools, tables,
+                                      posv, attn_impl=impl)
+        ps = next(iter(pools.values())).shape[1]
+        cache = jax.tree.map(
+            lambda a: a[tables].reshape((b, nb * ps) + a.shape[2:]), pools)
+        out, new_cache = layer_decode(weights, x, cfg, None, cache, posv,
+                                      attn_impl=impl)
+        rows = jnp.arange(b)
+
+        def scatter(pool_leaf, cache_leaf):
+            val = cache_leaf[rows, posv]
+            return pool_leaf.at[tables[rows, posv // ps],
+                                posv % ps].set(val.astype(pool_leaf.dtype))
+
+        pools = jax.tree.map(scatter, pools, new_cache)
+        return out, pools
+
     @jax.jit
     def head_apply(weights, x):
         weights = qz.dequant_tree(weights)
@@ -149,7 +188,9 @@ def build_module_fns(cfg: ModelConfig,
 
     fns = {"embed": embed_apply, "layer": layer_apply,
            "layer_cache": layer_cache_apply,
-           "layer_decode": layer_decode_apply, "head": head_apply}
+           "layer_decode": layer_decode_apply,
+           "layer_decode_paged": layer_decode_paged_apply,
+           "head": head_apply}
     if cfg.family == MOE:
         fns.update(_build_moe_stream_fns(cfg, impl))
     return fns

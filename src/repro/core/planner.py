@@ -58,6 +58,8 @@ import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.kv_pages import pages_for
+
 
 @dataclasses.dataclass
 class PlanEntry:
@@ -87,6 +89,7 @@ class GenPlanEntry:
     predicted_throughput_tps: float = 0.0  # inflight tokens / decode round
     dtype: Optional[str] = None       # shard dtype when searching over quant
     expert_cache_bytes: int = 0       # ExpertCache size (expert-split MoE)
+    page_size: int = 0                # KV page size (0 = dense reservation)
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +278,12 @@ def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
         return a < b
     if cand.pin_window != best.pin_window:
         return cand.pin_window > best.pin_window
-    return cand.expert_cache_bytes > best.expert_cache_bytes
+    if cand.expert_cache_bytes != best.expert_cache_bytes:
+        return cand.expert_cache_bytes > best.expert_cache_bytes
+    # same latency, same pins: prefer the schedule holding FEWER cache
+    # bytes — paged reservations with prefix sharing free real headroom
+    # the simulator's objective is blind to
+    return cand.cache_bytes < best.cache_bytes
 
 
 def plan(profile, budgets: List[Optional[int]],
@@ -403,7 +411,10 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                   new_tokens: int, cache_bytes_per_layer: int,
                   max_agents: Optional[int] = None,
                   max_pin: Optional[int] = None,
-                  max_inflight: int = 1) -> List[GenPlanEntry]:
+                  max_inflight: int = 1,
+                  page_sizes: Tuple[int, ...] = (),
+                  total_len: Optional[int] = None,
+                  shared_prefix_len: int = 0) -> List[GenPlanEntry]:
     """Joint (num_agents, pin_window, inflight) schedule for KV-cache
     generation and continuous-batching serving — over one profile, or
     ``{dtype: profile}`` to search shard dtype jointly (module docs).
@@ -427,26 +438,54 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     Capacity-first also makes the planner MONOTONE: a larger budget never
     shrinks ``inflight``, because feasibility of a count only ever grows
     with budget.
+
+    The **page dimension** (``page_sizes`` non-empty, needs
+    ``total_len``): each candidate page size charges the paged
+    scheduler's admission model instead of the dense ``r x total_len``
+    reservation — ``ceil(total_len / ps)`` pages per request, of which
+    the ``shared_prefix_len // ps`` full pages under the workload's
+    common prompt prefix are charged ONCE across all ``r`` requests (the
+    expected prefix-hit bytes), plus one page of growth headroom per
+    request.  Page size 0 (always searched) is the dense reservation, so
+    paging wins only where sharing/rounding actually frees bytes; the
+    winning entry's ``page_size`` feeds the engine and scheduler.
     """
     profiles = [(label, _with_decode_times(p))
                 for label, p in _as_profiles(profile)]
     rounds = max(new_tokens - 1, 0)
+    if page_sizes and not total_len:
+        raise ValueError("page_sizes search requires total_len")
+    ps_grid = [0] + [int(p) for p in page_sizes if p and p > 0]
+
+    def kv_bytes(n_layers: int, r: int, ps: int) -> int:
+        """Total KV reservation the scheduler will charge for ``r``
+        in-flight requests at page size ``ps`` (0 = dense)."""
+        if ps == 0:
+            return n_layers * cache_bytes_per_layer * r
+        tok = cache_bytes_per_layer // total_len      # exact: linear in S
+        pages_per_req = pages_for(total_len, ps)
+        shared = min(shared_prefix_len // ps, pages_per_req)
+        pages = shared + r * (pages_per_req - shared) + r   # + headroom
+        return n_layers * tok * ps * pages
 
     def best_at(label, prof, budget, r: int) -> Optional[GenPlanEntry]:
-        """Best (m, pin[, expert cache]) candidate with ``r`` requests in
-        flight."""
+        """Best (m, pin[, expert cache][, page size]) candidate with
+        ``r`` requests in flight."""
         n = prof["num_layers"]
         lb = prof["layer_bytes"]
         other = prof["other_bytes"]
         max_m = max_agents or min(n, 12)
         pin_cap = n if max_pin is None else min(max_pin, n)
-        cache_total = n * cache_bytes_per_layer * r
         moe = bool(prof.get("expert_split"))
         seq = max(int(prof.get("seq", 1)), 1)
         slim = _slim_profile(prof) if moe else prof
         cache_opts = (_expert_cache_grid(slim, r, seq) if moe else [0])
+        # paged serving does not support expert-split MoE (the scheduler
+        # rejects the combination), so MoE profiles search dense only
+        pss = [0] if moe else ps_grid
         best: Optional[GenPlanEntry] = None
-        for cbytes in cache_opts:
+        for ps, cbytes in [(p, c) for p in pss for c in cache_opts]:
+            cache_total = kv_bytes(n, r, ps)
             resident = cache_total + cbytes
             derived = {}   # (pre_prof, dec_prof) per m — pin-independent
             for pin in range(pin_cap + 1):
@@ -457,8 +496,13 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                                        pin_window=pin, n_layers=n)
                       <= budget]
                 if not ms:
-                    # keep one fallback candidate per budget
-                    ms = [1] if pin == 0 and cbytes == cache_opts[0] else []
+                    # keep one fallback candidate per page size: the
+                    # analytic peak overestimates (simulate's in-order
+                    # grants are tighter), and page sizes differ in
+                    # cache bytes, so pruning all of them here would
+                    # hide feasible paged schedules
+                    ms = ([1] if pin == 0 and cbytes == cache_opts[0]
+                          else [])
                 for m in ms:
                     # tier 2: pre-run both round shapes.  The prefill
                     # round loads every layer but RETAINS the pinned
@@ -497,7 +541,8 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                                         ok, inflight=r,
                                         predicted_throughput_tps=tput,
                                         dtype=label,
-                                        expert_cache_bytes=cbytes)
+                                        expert_cache_bytes=cbytes,
+                                        page_size=ps)
                     if _gen_better(cand, best):
                         best = cand
         return best

@@ -35,6 +35,44 @@ All caches are padded to ``max_total_len`` slots so stacked decode reuses
 one jitted executable per batch size (padding past a request's position
 is exactly masked out — softmax contributions are exact zeros — so
 batched decoding is token-for-token identical to sequential runs).
+
+**Paged mode** (``page_size`` set, core/kv_pages.py): instead of one
+contiguous max-length reservation per request, the KV ledger bytes are
+carved into fixed-size pages mapped through per-request block tables.
+
+  * Admission charges only the request's PROMPT pages (pages a live
+    sibling already mapped through the ``PrefixTree`` are refcount
+    bumps — a fleet of requests behind one system prompt charges its
+    prefix once), so the decode floor is pages-actually-mapped plus one
+    page of headroom per in-flight request instead of
+    ``inflight x max_total_len``.  A shared page holds K/V the
+    sibling's prefill computed: bitwise what this request would have
+    written when the prompts are the same LENGTH; a different length
+    reuses values from a different prefill shape — equal up to float
+    reassociation, so greedy can diverge at near-tie logits (the same
+    caveat as preemption below).
+  * Decode grows a request one page at a time as its position crosses a
+    page boundary; writes into a shared page copy-on-write it first.
+  * If growth cannot clear the floor, the YOUNGEST in-flight request is
+    preempted — its pages are freed and it re-queues with its tokens so
+    far (re-prefilled on re-admission); the oldest request always fits
+    alone (submit() enforced it), so serving never deadlocks.  A
+    re-prefill recomputes bit-identical K/V, but full-sequence prefill
+    and incremental decode sum the softmax in different orders, so a
+    preempted request's continuation can diverge from the sequential
+    reference at float-tie tokens — preemption is a correctness-
+    preserving overload valve, not part of the equivalence guarantee.
+  * Retirement drops one reference per page: non-shared pages free (and
+    re-enter the free list at the pool's high-water mark) the moment
+    the request finishes; pages shared with a live sibling survive
+    until the last sharer retires.
+
+Physical page storage is one ``(rows, page_size, ...)`` array per layer
+per cache leaf, sized once at construction (``max_inflight`` worst-case
+tables + COW slack) so jitted decode shapes never change; the ledger
+only ever charges MAPPED pages, and the decode attention gathers K/V
+tiles through the block table (Pallas kernel under
+``attn_impl="pallas"``, kernels/paged_decode.py).
 """
 from __future__ import annotations
 
@@ -47,6 +85,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import PipeloadEngine, _Ledger
+from repro.core.kv_pages import BlockTable, PagePool, PrefixTree, pages_for
 
 
 @dataclasses.dataclass
@@ -62,6 +101,7 @@ class Request:
     admitted_round: int = -1
     finished_round: int = -1
     cache_bytes: int = 0          # ledger reservation while in flight
+    table: Optional[BlockTable] = None   # paged mode: page ids + n_shared
 
     @property
     def done(self) -> bool:
@@ -91,6 +131,17 @@ class ServeStats:
     expert_evictions: int = 0
     expert_cache_bytes: int = 0
     unique_experts_per_round: float = 0.0
+    # reproducibility: the RNG seed the serving trace was generated with
+    # (None when the caller did not thread one)
+    seed: Optional[int] = None
+    # paged-KV extras (0 / dense defaults when page_size is unset)
+    page_size: int = 0
+    pages_allocated: int = 0       # pool allocs (fresh + free-list reuse)
+    page_reuses: int = 0           # allocs served from the free list
+    prefix_hit_pages: int = 0      # prompt pages shared via the PrefixTree
+    cow_copies: int = 0            # copy-on-write page swaps
+    preemptions: int = 0           # requests bounced back to the queue
+    pool_pages_peak: int = 0       # high-water MAPPED page count
 
     @property
     def tokens_per_s(self) -> float:
@@ -117,13 +168,23 @@ class BatchScheduler:
     """
 
     def __init__(self, engine: PipeloadEngine, *, max_inflight: int = 4,
-                 max_total_len: int = 128):
+                 max_total_len: int = 128,
+                 page_size: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 seed: Optional[int] = None):
         if engine.mode == "baseline":
             raise ValueError("continuous batching needs a pipelined mode "
                              "(pipeload / pipeswitch)")
         self.engine = engine
         self.max_inflight = max(1, max_inflight)
         self.max_total_len = max_total_len
+        # paged KV mode: explicit page_size wins, else inherit the
+        # engine's (the planner threads its page-size pick through the
+        # engine); 0/None = dense per-request reservations
+        if page_size is None:
+            page_size = engine.page_size
+        self.page_size = page_size if page_size and page_size > 0 else None
+        self.seed = seed
         self.queue: List[Request] = []      # FIFO by (arrival_round, rid)
         self.inflight: List[Request] = []
         self.done: Dict[int, Request] = {}
@@ -141,6 +202,27 @@ class BatchScheduler:
         self._max_seen = 0
         self._per_req_cache = (len(engine.layer_names)
                                * engine.cfg.cache_bytes(1, max_total_len))
+        # ---- paged-KV state (None/unused in dense mode) ----
+        self.pool: Optional[PagePool] = None
+        self.tree: Optional[PrefixTree] = None
+        self._pools: Optional[Dict[str, dict]] = None  # layer -> (P, ps, ..)
+        self.preemptions = 0
+        if self.page_size:
+            if engine.expert is not None:
+                raise ValueError(
+                    "paged KV serving is not supported with expert-split "
+                    "MoE checkpoints yet; repartition whole-layer or drop "
+                    "page_size")
+            ps = self.page_size
+            self._nb = pages_for(max_total_len, ps)       # table width
+            self._page_bytes = (len(engine.layer_names)
+                                * engine.cfg.cache_bytes(1, ps))
+            self.pool = PagePool(ps, self._page_bytes, self.ledger)
+            self.tree = PrefixTree(ps) if prefix_cache else None
+            # fixed physical pool rows: worst-case tables + COW slack,
+            # sized ONCE so jitted decode shapes never change (the
+            # ledger charges only MAPPED pages; these rows are buffer)
+            self._pool_rows = self.max_inflight * self._nb + 2
         self._expert_snap = (engine.expert.snapshot()
                              if engine.expert is not None else None)
         # the widest fetch this workload can lock (a max-length prompt's
@@ -168,11 +250,25 @@ class BatchScheduler:
                 f"prompt ({len(prompt)}) + max_new_tokens "
                 f"({max_new_tokens}) exceeds max_total_len "
                 f"{self.max_total_len}")
-        self.engine._check_kv_budget(self._per_req_cache, inflight=1,
-                                     expert_floor=self._expert_floor)
+        if self.page_size:
+            # worst case = every page of its final length, unshared,
+            # PLUS the one-page admission headroom (_fits_paged charges
+            # it per in-flight request — without it a request whose
+            # total fits the budget exactly would be accepted here yet
+            # never admitted, spinning run() forever).  This is the
+            # guarantee growth-with-preemption leans on: a request
+            # ALONE can always map its next page.
+            worst = ((pages_for(len(prompt) + max_new_tokens,
+                                self.page_size) + 1) * self._page_bytes)
+            self.engine._check_kv_budget(worst, inflight=1)
+            per_req = worst
+        else:
+            self.engine._check_kv_budget(self._per_req_cache, inflight=1,
+                                         expert_floor=self._expert_floor)
+            per_req = self._per_req_cache
         req = Request(self._next_rid, prompt, max_new_tokens,
                       arrival_round=max(arrival_round, 0),
-                      cache_bytes=self._per_req_cache)
+                      cache_bytes=per_req)
         self._next_rid += 1
         self.queue.append(req)
         self.queue.sort(key=lambda r: (r.arrival_round, r.rid))
@@ -206,26 +302,195 @@ class BatchScheduler:
                 return floor <= eng.budget
         return False
 
+    # ---- paged-mode admission / growth / preemption ------------------
+    def _fits_paged(self, extra_pages: int, inflight_after: int) -> bool:
+        """Paged decode floor: pages actually mapped, plus the new pages,
+        plus ONE page of growth headroom per in-flight request."""
+        eng = self.engine
+        if eng.budget is None:
+            return True
+        cache = ((self.pool.mapped_pages + extra_pages + inflight_after)
+                 * self._page_bytes)
+        return eng._kv_floor(cache) <= eng.budget
+
+    def _admit_one_paged(self, req: Request, inflight_after: int) -> bool:
+        """Map the request's prompt pages (prefix-tree hits are refcount
+        bumps, charged once across the fleet); False = does not fit at
+        this boundary."""
+        toks = req.tokens or [int(t) for t in req.prompt]
+        n_pages = pages_for(len(toks), self.page_size)
+        walk = self.tree.walk(toks) if self.tree is not None else None
+        shared = len(walk[0]) if walk is not None else 0
+        if not self._fits_paged(n_pages - shared, inflight_after):
+            return False
+        if self.tree is not None:
+            pids, n_shared = self.tree.insert(toks, self.pool, walk=walk)
+        else:
+            pids, n_shared = [self.pool.alloc()
+                              for _ in range(n_pages)], 0
+        req.table = BlockTable(pids, n_shared)
+        req.tokens = toks
+        return True
+
+    def _preempt(self, victim: Request) -> None:
+        """Bounce ``victim`` back to the queue, freeing its non-shared
+        pages; it re-prefills from its tokens so far on re-admission."""
+        victim.table.release_all(self.pool, self.tree)
+        self.inflight.remove(victim)
+        victim.admitted_round = -1
+        victim.arrival_round = self.round
+        self.queue.append(victim)
+        self.queue.sort(key=lambda r: (r.arrival_round, r.rid))
+        self.preemptions += 1
+        self.events.append((time.perf_counter() - self._t0,
+                            "preempt", f"req{victim.rid}"))
+
+    def _alloc_with_preemption(self, req: Request) -> Optional[int]:
+        """Map one more page for ``req``, preempting the YOUNGEST
+        in-flight request — possibly ``req`` itself — while the floor
+        would not clear (strict age order: an older request's progress
+        is never sacrificed for a younger grower).  Returns None when
+        ``req`` was the victim; otherwise always succeeds — once ``req``
+        is alone, submit() guaranteed its worst case fits."""
+        while not self._fits_paged(1, 0) and len(self.inflight) > 1:
+            victim = self.inflight[-1]        # admission-ordered: youngest
+            self._preempt(victim)
+            if victim is req:
+                return None
+        pid = self.pool.alloc()
+        if pid >= self._pool_rows:
+            raise RuntimeError(
+                f"page pool overflow: page {pid} >= {self._pool_rows} "
+                f"physical rows (max_inflight x table width + COW slack)"
+            )   # unreachable: admission + growth bound live pages
+        return pid
+
+    def _grow_pages(self):
+        """Round boundary, before admission: map each in-flight
+        request's write page — grow across page boundaries, and
+        copy-on-write a shared page before its first divergent write."""
+        if not self.inflight:
+            return
+        cow: List[Tuple[Request, int, int]] = []
+        for req in list(self.inflight):
+            if req not in self.inflight:    # preempted by an earlier grower
+                continue
+            t = req.table
+            pidx = req.pos // self.page_size
+            while len(t.pages) <= pidx:
+                pid = self._alloc_with_preemption(req)
+                if pid is None:             # req itself was the victim
+                    break
+                t.pages.append(pid)
+            if req not in self.inflight:
+                continue
+            pid = t.pages[pidx]
+            if self.pool.is_shared(pid):
+                new = self._alloc_with_preemption(req)
+                if new is None:             # req preempted: refs already
+                    continue                # dropped by release_all
+                cow.append((req, pid, new))
+                # usually the sibling keeps the old page — but if the
+                # COW alloc preempted that sibling, this drop is the
+                # LAST reference and the tree node must go with it
+                if self.pool.release(pid) and self.tree is not None:
+                    self.tree.forget(pid)
+                t.pages[pidx] = new
+        # drop copies whose OWNER was preempted after queuing them (its
+        # freed target id may already be re-mapped by a later grower —
+        # a stale entry would make the batched scatter write the same
+        # destination twice), then copy page contents old -> new in one
+        # batched update per leaf
+        cow = [(o, n) for r, o, n in cow if r in self.inflight]
+        self.pool.stats.cow_copies += len(cow)   # copies actually made
+        if cow:
+            old = jnp.asarray([o for o, _ in cow], jnp.int32)
+            new = jnp.asarray([n for _, n in cow], jnp.int32)
+            self._pools = {
+                name: jax.tree.map(lambda a: a.at[new].set(a[old]), c)
+                for name, c in self._pools.items()}
+
+    def _pool_like(self, cache):
+        """Zeroed physical page array(s) shaped for ``cache`` leaves:
+        (B, T, ...) -> (pool_rows, page_size, ...).  The ONE place the
+        pool layout is defined — warmup compiles against arrays built
+        here, so serving shapes always match the warmed executables."""
+        return jax.tree.map(
+            lambda a: jnp.zeros(
+                (self._pool_rows, self.page_size) + a.shape[2:], a.dtype),
+            cache)
+
+    def _ensure_pool_arrays(self, template: Dict[str, dict]):
+        """Create the physical page arrays from the first prefill's
+        cache shapes: one (rows, page_size, ...) array per layer per
+        cache leaf, sized once (see class docstring)."""
+        if self._pools is not None:
+            return
+        self._pools = {name: self._pool_like(c)
+                       for name, c in template.items()}
+
+    def _scatter_prefills(self, reqs: List[Request],
+                          caches: List[Dict[str, dict]]):
+        """Write the boundary's captured prefill caches into each
+        request's OWNED pages — ONE batched scatter per layer per cache
+        leaf (a per-request loop would copy the whole physical pool
+        once per update).  Shared prefix pages are skipped: a sibling
+        already wrote identical K/V, and a shared partial page may hold
+        the sibling's generated tokens past this prompt (masked by the
+        valid-length mask, clobbered by nothing)."""
+        ps = self.page_size
+        owned = [(r, c) for r, c in zip(reqs, caches)
+                 if len(r.table.pages) > r.table.n_shared]
+        if not owned:
+            return
+        self._ensure_pool_arrays(owned[0][1])
+        pids = jnp.asarray([pid for r, _ in owned
+                            for pid in r.table.pages[r.table.n_shared:]],
+                           jnp.int32)
+
+        def rows(a, t):
+            lo, hi = t.n_shared * ps, len(t.pages) * ps
+            return a[0, lo:hi].reshape((len(t.pages) - t.n_shared, ps)
+                                       + a.shape[2:])
+
+        for name in self._pools:
+            blocks = [jax.tree.map(lambda a, t=r.table: rows(a, t), c[name])
+                      for r, c in owned]
+            stacked = (blocks[0] if len(blocks) == 1 else jax.tree.map(
+                lambda *xs: jnp.concatenate(xs), *blocks))
+            self._pools[name] = jax.tree.map(
+                lambda leaf, rr: leaf.at[pids].set(rr.astype(leaf.dtype)),
+                self._pools[name], stacked)
+
     def _admit(self) -> List[Request]:
         """FIFO admission at the current boundary.  Strict head-of-line:
-        all requests reserve the same padded cache size, so skipping the
-        head could never help; blocking keeps arrival order fair and is
+        skipping the head could never help (dense mode reserves one
+        padded size for everyone; paged mode's head is also the next to
+        shrink via sharing); blocking keeps arrival order fair and is
         deadlock-free (submit() rejected anything that can't fit alone,
         and in-flight requests always retire in finite rounds)."""
         admitted: List[Request] = []
         while (self.queue
                and self.queue[0].arrival_round <= self.round
-               and len(self.inflight) + len(admitted) < self.max_inflight
-               and self._fits(self.queue[0].cache_bytes)):
-            req = self.queue.pop(0)
-            # reserve the request's pages for its whole lifetime (never
-            # blocks: _fits checked the floor, and at a boundary nothing
-            # is streaming)
-            self.ledger.acquire(req.cache_bytes, lambda: False)
-            self._cache_resident += req.cache_bytes
-            self._cache_peak = max(self._cache_peak, self._cache_resident)
+               and len(self.inflight) + len(admitted) < self.max_inflight):
+            req = self.queue[0]
+            if self.page_size:
+                if not self._admit_one_paged(
+                        req, len(self.inflight) + len(admitted) + 1):
+                    break
+            else:
+                if not self._fits(req.cache_bytes):
+                    break
+                # reserve the request's pages for its whole lifetime
+                # (never blocks: _fits checked the floor, and at a
+                # boundary nothing is streaming)
+                self.ledger.acquire(req.cache_bytes, lambda: False)
+                self._cache_resident += req.cache_bytes
+                self._cache_peak = max(self._cache_peak,
+                                       self._cache_resident)
+                req.tokens = list(map(int, req.prompt))
+            self.queue.pop(0)
             req.admitted_round = self.round
-            req.tokens = list(map(int, req.prompt))
             self.events.append((time.perf_counter() - self._t0,
                                 "admit", f"req{req.rid}"))
             admitted.append(req)
@@ -233,10 +498,16 @@ class BatchScheduler:
 
     def _retire(self, finished: List[Request]):
         """S_dest for cache pages: release the ledger bytes the moment a
-        request completes so the next boundary can re-grant them."""
+        request completes so the next boundary can re-grant them.  Paged
+        mode drops one reference per page — pages shared with a live
+        sibling survive until the LAST sharer retires (exact-drain at
+        page granularity)."""
         for req in finished:
-            self.ledger.release(req.cache_bytes)
-            self._cache_resident -= req.cache_bytes
+            if self.page_size:
+                req.table.release_all(self.pool, self.tree)
+            else:
+                self.ledger.release(req.cache_bytes)
+                self._cache_resident -= req.cache_bytes
             req.finished_round = self.round
             self.done[req.rid] = req
             self.events.append((time.perf_counter() - self._t0,
@@ -270,6 +541,10 @@ class BatchScheduler:
         """One round boundary + (if there is work) one pipeline round.
         Returns False once every submitted request has retired."""
         eng = self.engine
+        if self.page_size:
+            # map every decoder's write page first (may preempt), THEN
+            # admit into whatever room is left
+            self._grow_pages()
         admitted = self._admit()
         if not self.inflight and not admitted:
             if not self.queue:
@@ -302,14 +577,34 @@ class BatchScheduler:
                 toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
                 pre_xs.append(fns["embed"](emb, toks))
 
-        dec_x, caches, pre_outs, pre_caches = eng.run_batch_round(
-            self.ledger, self.events, t0,
-            decode_x=dec_x,
-            decode_caches=self._caches,
-            decode_pos=dec_pos,
-            prefill_xs=pre_xs,
-            prefill_total=self.max_total_len)
-        self._caches = caches
+        if self.page_size:
+            # stacked block tables, padded with page 0 (masked slots)
+            dec_tables = None
+            if dec_x is not None:
+                tb = np.zeros((len(self.inflight), self._nb), np.int32)
+                for i, r in enumerate(self.inflight):
+                    tb[i, :len(r.table.pages)] = r.table.pages
+                dec_tables = jnp.asarray(tb)
+            dec_x, pools, pre_outs, pre_caches = eng.run_batch_round(
+                self.ledger, self.events, t0,
+                decode_x=dec_x,
+                decode_pos=dec_pos,
+                prefill_xs=pre_xs,
+                prefill_total=self._nb * self.page_size,
+                paged_pools=(self._pools if dec_x is not None else None),
+                decode_tables=dec_tables)
+            if dec_x is not None:
+                self._pools = pools
+            self._scatter_prefills(admitted, pre_caches)
+        else:
+            dec_x, caches, pre_outs, pre_caches = eng.run_batch_round(
+                self.ledger, self.events, t0,
+                decode_x=dec_x,
+                decode_caches=self._caches,
+                decode_pos=dec_pos,
+                prefill_xs=pre_xs,
+                prefill_total=self.max_total_len)
+            self._caches = caches
 
         # ---- heads: one greedy token per request this round
         head = eng._resident["head"]
@@ -322,17 +617,19 @@ class BatchScheduler:
         for i, req in enumerate(admitted):
             logits = fns["head"](head, pre_outs[i])            # (1, V)
             req.tokens.append(int(jnp.argmax(logits, -1)[0]))
-            req.generated = 1
+            req.generated += 1           # re-prefills resume, not reset
 
         # ---- merge admissions, then retire mid-stream finishers
-        self._append_rows(pre_caches)
+        if not self.page_size:
+            self._append_rows(pre_caches)
         self.inflight.extend(admitted)
         self._max_seen = max(self._max_seen, len(self.inflight))
         finished = [r for r in self.inflight if r.done]
         if finished:
             keep = [i for i, r in enumerate(self.inflight) if not r.done]
             self.inflight = [self.inflight[i] for i in keep]
-            self._drop_rows(keep)
+            if not self.page_size:       # paged rows live in the pool
+                self._drop_rows(keep)
             self._retire(finished)
         self.round += 1
         return bool(self.inflight or self.queue)
@@ -350,14 +647,29 @@ class BatchScheduler:
         if self.engine.expert is not None:
             expert_kw = self.engine.expert.stats_since(self._expert_snap)
             self._expert_snap = self.engine.expert.snapshot()
+        paged_kw = {}
+        if self.page_size:
+            paged_kw = dict(
+                page_size=self.page_size,
+                pages_allocated=self.pool.stats.allocs,
+                page_reuses=self.pool.stats.reuses,
+                prefix_hit_pages=self.tree.hits if self.tree else 0,
+                cow_copies=self.pool.stats.cow_copies,
+                preemptions=self.preemptions,
+                pool_pages_peak=self.pool.mapped_peak)
+        # paged mode: the pool records the true mapped high-water on
+        # every alloc (an end-of-boundary sample would miss pages a
+        # mid-loop preemption freed again)
+        cache_peak = (self.pool.mapped_peak_bytes if self.page_size
+                      else self._cache_peak)
         stats = ServeStats(
             rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
             loads=sum(1 for e in self.events if e[1] == "load_end"),
             streamed_bytes=self.engine._streamed(self.events),
             new_tokens=sum(r.generated for r in self.done.values()),
             requests=len(self.done), max_inflight_seen=self._max_seen,
-            cache_bytes_peak=self._cache_peak, events=self.events,
-            **expert_kw)
+            cache_bytes_peak=cache_peak, events=self.events,
+            seed=self.seed, **paged_kw, **expert_kw)
         return outs, stats
 
     # ------------------------------------------------------------------
@@ -372,19 +684,32 @@ class BatchScheduler:
         emb = eng._resident.get("embed") or eng._load("embed")
         head = eng._resident.get("head") or eng._load("head")
         w0 = eng._load(eng.layer_names[0])
-        T = self.max_total_len
+        T = (self._nb * self.page_size if self.page_size
+             else self.max_total_len)
         for s in sorted(set(int(p) for p in prompt_lens)):
             x = fns["embed"](emb, jnp.zeros((1, s), jnp.int32))
             px, _ = eng._layer_cache(0, w0, x, T)
             fns["head"](head, px).block_until_ready()
         x1 = fns["embed"](emb, jnp.zeros((1, 1), jnp.int32))
         _, c1 = eng._layer_cache(0, w0, x1, T)
-        for r in range(1, self.max_inflight + 1):
-            cr = jax.tree.map(lambda a: jnp.concatenate([a] * r), c1)
-            xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
-            dr, _ = eng._layer_decode(0, w0, xr, cr,
-                                      jnp.zeros((r,), jnp.int32))
-            fns["head"](head, dr).block_until_ready()
+        if self.page_size:
+            # one fixed-size pool per leaf: compile the paged decode at
+            # every batch size (the pool rows never change, so these are
+            # the serving executables)
+            pool1 = self._pool_like(c1)
+            for r in range(1, self.max_inflight + 1):
+                tbr = jnp.zeros((r, self._nb), jnp.int32)
+                xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
+                dr, _ = fns["layer_decode_paged"](
+                    w0, xr, pool1, tbr, jnp.zeros((r,), jnp.int32))
+                fns["head"](head, dr).block_until_ready()
+        else:
+            for r in range(1, self.max_inflight + 1):
+                cr = jax.tree.map(lambda a: jnp.concatenate([a] * r), c1)
+                xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
+                dr, _ = eng._layer_decode(0, w0, xr, cr,
+                                          jnp.zeros((r,), jnp.int32))
+                fns["head"](head, dr).block_until_ready()
         del w0, emb, head
         if eng.expert is not None:
             # warmup's compile-time fetches are not serving traffic

@@ -5,10 +5,14 @@
   flash_attention  — causal/windowed online-softmax prefill attention
   flash_decode     — single-token decode over a long KV cache, emitting
                      unnormalised partials for the cross-shard combine
+  paged_decode     — flash decode over the paged KV cache: block tables
+                     ride in as scalar prefetch, so each K/V tile is
+                     gathered by page id in the grid pipeline
 """
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.flash_decode import (flash_decode,  # noqa: F401
                                         flash_decode_partial)
+from repro.kernels.paged_decode import paged_flash_decode  # noqa: F401
 from repro.kernels.streamed_matmul import (quantized_matmul,  # noqa: F401
                                            streamed_matmul)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash_attn
 from repro.kernels.flash_decode import (flash_decode as _flash_decode,
                                         flash_decode_partial as _fd_partial)
+from repro.kernels.paged_decode import paged_flash_decode as _paged_decode
 from repro.kernels.streamed_matmul import (quantized_matmul as _qmatmul,
                                            streamed_matmul as _matmul)
 
@@ -60,3 +61,12 @@ def decode(q, k, v, valid, *, block_k: int = 512):
 def decode_partial(q, k, v, valid, *, block_k: int = 512):
     return _fd_partial(q, k, v, valid, block_k=block_k,
                        interpret=not _on_tpu())
+
+
+@jax.jit
+def paged_decode(q, k_pages, v_pages, tables, lengths):
+    """Paged flash decode through per-row block tables, directly over
+    the scheduler's (P, page, KV, dh) physical pool layout (tile size
+    is the pool's page size; no relayout or densify)."""
+    return _paged_decode(q, k_pages, v_pages, tables, lengths,
+                         interpret=not _on_tpu())

@@ -1,0 +1,117 @@
+"""Paged flash-decoding Pallas kernel: block-table K/V gather.
+
+The paged KV cache (core/kv_pages.py) stores K/V in fixed-size pages of
+a physical pool; each request's logical sequence is a block table of
+page ids.  This kernel runs one query token per (row, kv-head, q-group)
+against that paged cache WITHOUT densifying or relayouting it: the
+block table rides in as a scalar-prefetch operand, so the BlockSpec
+index_map dereferences ``tables[b, j]`` to DMA exactly the j-th logical
+page's tile for one kv head HBM -> VMEM — the gather happens in the
+grid pipeline, not as a jnp ``take`` (or transpose) that materialises a
+copy of the pool.
+
+Masking is positional: row ``b`` attends to global slots
+``[0, lengths[b])``; slots past the length (the tail of the last mapped
+page, and any padded table entries — callers pad short tables with page
+0) contribute exact zeros, so the result is identical to a dense decode
+over the logically contiguous cache.
+
+Layout (the scheduler's native pool layout — no flattening):
+q (B, KV, G, dh); k_pages/v_pages (P, page, KV, dh); tables (B, NB)
+int32; lengths (B,) int32.  The grouped cache tile is read once per
+(kv, g) grid step — the same G-fold read amplification as
+flash_decode's flat layout, and the same price for its HBM -> VMEM
+streaming pipeline.  The running-softmax body matches flash_decode.py
+block for block — only the source of each K/V tile changed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, n_b: int, page: int,
+                  scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0, :][None] * scale                     # (1, dh)
+    k = k_ref[0, :, 0, :]                                   # (page, dh)
+    s = jnp.dot(q, k.T,
+                preferred_element_type=jnp.float32)         # (1, page)
+    slot = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(slot < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))   # (1, 1)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(j == n_b - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out[None, None].astype(o_ref.dtype)
+
+
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, lengths: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """Normalised paged decode: (B, KV, G, dh), dtype of ``v_pages``.
+
+    ``tables`` (B, NB) maps each row's logical block j to a physical
+    page id; entries past ``ceil(lengths[b] / page)`` are padding (any
+    valid page id — their slots are masked).  ``lengths`` (B,) is the
+    number of live slots per row (current position + 1).
+    """
+    b, kv, g, dh = q.shape
+    page = k_pages.shape[1]
+    nb = tables.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+
+    kern = functools.partial(_paged_kernel, n_b=nb, page=page, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, lengths
+        grid=(b, kv, g, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (b, k, gg, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (tab[b, j], 0, k,
+                                                         0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (tab[b, j], 0, k,
+                                                         0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, k, gg, j, tab, lens: (b, k, gg,
+                                                               0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), v_pages.dtype),
+        interpret=interpret,
+    )(tables, lengths, q, k_pages, v_pages)

@@ -71,6 +71,28 @@ def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                       v.astype(jnp.float32)).astype(v.dtype)
 
 
+def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Paged decode oracle: densify the block-table gather, then run the
+    masked grouped softmax.  q: (B, KV, G, dh); k_pages/v_pages:
+    (P, page, KV, dh); tables: (B, NB) int32 page ids; lengths: (B,)
+    live slots per row."""
+    b, kv, g, dh = q.shape
+    page = k_pages.shape[1]
+    nb = tables.shape[1]
+    s_tot = nb * page
+    k = k_pages[tables].reshape(b, s_tot, kv, dh)
+    v = v_pages[tables].reshape(b, s_tot, kv, dh)
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    valid = jnp.arange(s_tot)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p,
+                      v.astype(jnp.float32)).astype(v.dtype)
+
+
 def decode_partial_ref(q, k, v, valid):
     """Unnormalised (o, m, l) partials matching flash_decode_partial."""
     dh = q.shape[-1]

@@ -12,9 +12,21 @@ so aggregate tokens/s scales with concurrency while peak memory stays
 within the budget.
 
 ``--arrival-rate R`` replays a Poisson arrival process (R requests per
-round on average, deterministic under ``--seed``) instead of an
-everyone-at-once burst; ``--no-kv-cache`` falls back to the paper's
-sequential per-token re-prefill engine (§V-B2) for comparison.
+round on average, deterministic under ``--seed`` — the seed is recorded
+in ``ServeStats.seed`` so any serve-level run can be replayed exactly)
+instead of an everyone-at-once burst; ``--no-kv-cache`` falls back to
+the paper's sequential per-token re-prefill engine (§V-B2) for
+comparison.
+
+``--shared-prefix N`` makes every request's first N prompt tokens
+identical (the shared-system-prompt trace), and ``--page-size P`` adds
+the PAGED KV reservation (core/kv_pages.py) to the planner's search:
+requests map fixed-size cache pages through block tables, the radix
+prefix tree maps the shared prompt's pages once across the fleet, and
+admission charges pages actually mapped instead of
+``inflight x max_total_len`` — more concurrent users under the same
+budget.  ``--no-prefix-cache`` disables the sharing (pages stay
+per-request) for A/B runs.
 
 ``--quant int8|int4`` serves per-channel-quantized shards (~4x/8x fewer
 bytes streamed and resident per layer — deeper pin windows and more
@@ -73,7 +85,8 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         num_agents: int | None = None, pin_window: int | None = None,
         kv_cache: bool = True, max_inflight: int = 4,
         arrival_rate: float | None = None, seed: int = 0,
-        quant: str = "fp32"):
+        quant: str = "fp32", page_size: int = 0,
+        prefix_cache: bool = True, shared_prefix: int = 0):
     assert quant in QUANT_CHOICES, quant
     cfg = get(arch)
     if reduced:
@@ -85,7 +98,12 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
     quants = ("fp32", "int8", "int4") if quant == "auto" else (quant,)
     budget = int(budget_mb * 2**20) if budget_mb else None
     rng = np.random.default_rng(seed)
+    shared_prefix = max(0, min(shared_prefix, prompt_len))
     prompts = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
+    if shared_prefix:
+        # shared-system-prompt trace: every request opens with the same
+        # tokens (what the prefix tree maps once across the fleet)
+        prompts[:, :shared_prefix] = prompts[0, :shared_prefix]
 
     if not kv_cache:
         # paper's engine (§V-B2): sequential re-prefill, one weight
@@ -113,7 +131,12 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
     g = hermes.plan_generate([budget], prompt_len=prompt_len,
                              new_tokens=new_tokens,
                              max_inflight=max_inflight,
-                             quants=quants)[0]
+                             quants=quants,
+                             page_sizes=(page_size,) if page_size else (),
+                             # with sharing disabled every page is
+                             # private — don't let the plan assume hits
+                             shared_prefix_len=(shared_prefix
+                                                if prefix_cache else 0))[0]
     if not g.feasible:
         raise SystemExit(
             f"error: no feasible serving schedule for budget="
@@ -130,14 +153,17 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"{g.predicted_throughput_tps:.1f} tok/s aggregate, peak "
           f"{g.predicted_peak_bytes/2**20:.0f}MB "
           f"(cache {g.cache_bytes/2**20:.1f}MB"
+          + (f", page size {g.page_size}" if g.page_size else "")
           + (f", expert cache {g.expert_cache_bytes/2**20:.1f}MB"
              if g.expert_cache_bytes else "") + ")")
 
     eng = hermes.engine(mode="pipeload", budget_bytes=budget,
                         num_agents=agents, pin_window=pin,
-                        expert_cache_bytes=g.expert_cache_bytes or None)
+                        expert_cache_bytes=g.expert_cache_bytes or None,
+                        page_size=g.page_size or None)
     sched = BatchScheduler(eng, max_inflight=g.inflight,
-                           max_total_len=prompt_len + new_tokens)
+                           max_total_len=prompt_len + new_tokens,
+                           prefix_cache=prefix_cache, seed=seed)
     sched.warmup(prompt_lens=[prompt_len])
     arrivals = poisson_arrivals(requests, arrival_rate, rng)
     for i in range(requests):
@@ -152,7 +178,16 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"(cache {stats.cache_bytes_peak/2**20:.1f}MB), "
           f"{stats.loads} shard loads "
           f"({stats.streamed_bytes/2**20:.0f}MB streamed), "
-          f"max inflight seen {stats.max_inflight_seen}")
+          f"max inflight seen {stats.max_inflight_seen}, "
+          f"seed {stats.seed}")
+    if stats.page_size:
+        print(f"  paged KV: page size {stats.page_size}, "
+              f"{stats.pages_allocated} page allocs "
+              f"({stats.page_reuses} from the free list, pool peak "
+              f"{stats.pool_pages_peak} pages), "
+              f"{stats.prefix_hit_pages} prefix-hit pages, "
+              f"{stats.cow_copies} COW copies, "
+              f"{stats.preemptions} preemptions")
     if eng.expert is not None:
         print(f"  expert stream: hit rate {stats.expert_hit_rate:.0%} "
               f"({stats.expert_hits} hits / {stats.expert_misses} loads, "
@@ -184,12 +219,24 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrivals, requests per round "
                     "(default: all at once)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for the prompt/arrival trace; "
+                    "recorded in ServeStats.seed for exact replay")
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper's per-token re-prefill engine (§V-B2)")
     ap.add_argument("--quant", default="fp32", choices=QUANT_CHOICES,
                     help="shard precision; 'auto' = planner searches "
                     "dtype jointly with the schedule")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV: cache page size in tokens added to "
+                    "the planner's search (0 = dense per-request "
+                    "reservation)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged KV: disable radix-tree prompt-prefix "
+                    "page sharing")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N prompt tokens identical across "
+                    "requests (shared-system-prompt trace)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -197,7 +244,9 @@ def main():
         reduced=not args.full, num_agents=args.num_agents,
         pin_window=args.pin_window, kv_cache=not args.no_kv_cache,
         max_inflight=args.max_inflight, arrival_rate=args.arrival_rate,
-        seed=args.seed, quant=args.quant)
+        seed=args.seed, quant=args.quant, page_size=args.page_size,
+        prefix_cache=not args.no_prefix_cache,
+        shared_prefix=args.shared_prefix)
 
 
 if __name__ == "__main__":

@@ -443,6 +443,68 @@ def flash_decode(q, k_cache, v_cache, valid, ctx: Optional[ShardingCtx],
         out_specs=P(bs, None, None, None))(q, k_cache, v_cache, valid)
 
 
+def _pallas_paged_decode(q, k_pool, v_pool, tables, pos):
+    """Route paged decode through the Pallas block-table kernel
+    (kernels/paged_decode.py).  The kernel consumes the scheduler's
+    native (P, page, KV, dh) pool layout directly — its BlockSpec
+    index_map dereferences the scalar-prefetched table per (row, block)
+    and slices the kv head, so no transpose/densify of the pool is ever
+    materialised.  The grouped tile is re-read per q-head group (the
+    same G-fold read amplification as ``_pallas_decode``, the price of
+    the HBM -> VMEM streaming pipeline).
+    """
+    from repro.kernels import ops
+
+    return ops.paged_decode(q, k_pool, v_pool, tables,
+                            (pos + 1).astype(jnp.int32))
+
+
+def gqa_decode_paged(params, x, cfg: ModelConfig, pools, tables, pos, *,
+                     attn_impl=None):
+    """GQA decode against the PAGED cache: pools{k,v}: (P, page, KV, dh);
+    tables: (B, NB) block tables; pos: (B,) ragged positions.
+
+    The new token's K/V is written straight into its page
+    (``tables[b, pos // page]``, slot ``pos % page`` — the scheduler
+    guarantees that page is private, copy-on-writing shared pages at
+    the round boundary).  ``attn_impl="pallas"`` runs the block-table
+    kernel; the jnp path gathers the row's pages into the logically
+    contiguous cache, which is bit-identical to a dense decode over the
+    same padded length.  Full causal attention only (the paged serving
+    path does not model sliding windows).
+    """
+    b = x.shape[0]
+    kv, g, dh = cfg.n_kv_heads, cfg.q_heads_per_kv, cfg.head_dim
+    page = pools["k"].shape[1]
+    nb = tables.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = (pos.reshape(b, 1) if pos.ndim
+             else jnp.full((b, 1), pos, jnp.int32))
+    posv = pos_b[:, 0]
+    q, k, v = _project_qkv(params, x, cfg)
+    q = common.apply_rope(q, pos_b, cfg.rope_theta)
+    k = common.apply_rope(k, pos_b, cfg.rope_theta)
+
+    rows = jnp.arange(b)
+    pids = tables[rows, posv // page]
+    k_pool = pools["k"].at[pids, posv % page].set(
+        k[:, 0].astype(pools["k"].dtype))
+    v_pool = pools["v"].at[pids, posv % page].set(
+        v[:, 0].astype(pools["v"].dtype))
+
+    qh = q.reshape(b, kv, g, dh)
+    if attn_impl == "pallas":
+        out = _pallas_paged_decode(qh, k_pool, v_pool, tables, posv)
+    else:
+        k_cache = k_pool[tables].reshape(b, nb * page, kv, dh)
+        v_cache = v_pool[tables].reshape(b, nb * page, kv, dh)
+        valid = jnp.arange(nb * page)[None, :] <= pos_b
+        out = flash_decode(qh, k_cache, v_cache,
+                           jnp.broadcast_to(valid, (b, nb * page)), None)
+    out = out.reshape(b, 1, kv * g * dh) @ params["w_o"]
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def cache_update(cache, new, pos, ctx: Optional[ShardingCtx]):
     """Write ``new`` (B, KV, dh) into ``cache`` (B, S, KV, dh) at index ``pos``.
 

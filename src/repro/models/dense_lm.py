@@ -104,6 +104,21 @@ def layer_decode(p, x, cfg: ModelConfig, ctx, cache, pos, *, mrope3=None,
     return x, cache
 
 
+def layer_decode_paged(p, x, cfg: ModelConfig, pools, tables, pos, *,
+                       attn_impl=None):
+    """GQA decode against PAGED cache pools (core/kv_pages.py) — the
+    paged sibling of ``layer_decode``, kept adjacent so decode-body
+    changes land in both.  Single-device, full causal attention only
+    (MLA / windowed / mrope configs take the gather-based generic path
+    in core/modules.py, which reuses ``layer_decode`` itself)."""
+    h = common.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    a, pools = attn.gqa_decode_paged(p["attn"], h, cfg, pools, tables,
+                                     pos, attn_impl=attn_impl)
+    x = x + a
+    x, _ = _ffn(p, x, cfg, None)
+    return x, pools
+
+
 # ===========================================================================
 # VLM helpers
 # ===========================================================================
