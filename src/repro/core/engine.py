@@ -102,6 +102,11 @@ class RunStats:
     expert_evictions: int = 0
     expert_cache_bytes: int = 0
     unique_experts_per_round: float = 0.0
+    # speculative-decoding extras (0 for non-speculative runs)
+    spec_depth: int = 0
+    spec_rounds: int = 0           # draft-propose / verify rounds run
+    draft_tokens: int = 0          # tokens the draft proposed
+    accepted_tokens: int = 0       # proposals the target confirmed
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -116,6 +121,12 @@ class RunStats:
         """Fraction of expert activations served from the ExpertCache."""
         total = self.expert_hits + self.expert_misses
         return self.expert_hits / total if total else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted."""
+        return (self.accepted_tokens / self.draft_tokens
+                if self.draft_tokens else 0.0)
 
 
 class _Ledger:
@@ -142,6 +153,99 @@ class _Ledger:
         with self.cond:
             self.resident -= nbytes
             self.cond.notify_all()
+
+
+class DraftModel:
+    """A small model pinned WHOLE for speculative drafting.
+
+    Unlike the target — whose layers stream through the Loading Agents —
+    the draft is tiny enough to live resident under the budget, like the
+    pin window: ``pin`` loads every shard once and charges the ledger;
+    proposals are then plain jitted calls with no disk traffic.  The
+    draft keeps an ordinary dense KV cache (one contiguous
+    ``total_len`` block, charged as extra resident bytes) because its
+    cache is orders of magnitude smaller than the target's.
+    """
+
+    def __init__(self, ckpt_dir, cfg: ModelConfig, *,
+                 attn_impl: Optional[str] = "auto"):
+        self.dir = Path(ckpt_dir)
+        self.cfg = cfg
+        self.manifest = load_manifest(ckpt_dir)
+        self.fns = build_module_fns(cfg, attn_impl=attn_impl)
+        self.shards = {s["name"]: s for s in self.manifest["shards"]}
+        if self.manifest.get("expert_split"):
+            raise ValueError("expert-split checkpoints cannot be draft "
+                             "models (the draft must pin whole)")
+        self.layer_names = [s["name"] for s in self.manifest["shards"]
+                            if s["kind"] == "layer"]
+        self.total_bytes = sum(s["bytes"] for s in self.shards.values())
+        self.weights: Optional[Dict[str, dict]] = None
+
+    def cache_bytes(self, batch: int, total_len: int) -> int:
+        return (len(self.layer_names)
+                * self.cfg.cache_bytes(batch, total_len))
+
+    def pin(self, ledger: Optional[_Ledger] = None):
+        """Load every shard resident; charges ``ledger`` for the lot."""
+        if ledger is not None:
+            ledger.acquire(self.total_bytes, lambda: False)
+        if self.weights is None:
+            self.weights = {
+                name: jax.tree.map(jnp.asarray, load_shard(self.dir, name))
+                for name in self.shards}
+        return self
+
+    def unpin(self, ledger: Optional[_Ledger] = None):
+        """Return the draft's bytes to the budget (weights stay cached
+        host-side for the next run; the LEDGER charge is what budgets)."""
+        if ledger is not None:
+            ledger.release(self.total_bytes)
+
+    def prefill(self, tokens, total_len: int):
+        """Prompt pass; returns (last-token logits (B, V), caches)."""
+        assert self.weights is not None, "pin() the draft first"
+        fns, w = self.fns, self.weights
+        x = fns["embed"](w["embed"], jnp.asarray(tokens))
+        caches: Dict[str, dict] = {}
+        for name in self.layer_names:
+            x, caches[name] = fns["layer_cache"](w[name], x, total_len)
+        return fns["head"](w["head"], x), caches
+
+    def decode(self, token: int, caches, pos: int):
+        """Feed ``token`` at cache slot ``pos``; returns (logits (1, V),
+        caches) — the draft's prediction for slot ``pos + 1``."""
+        fns, w = self.fns, self.weights
+        x = fns["embed"](w["embed"], jnp.full((1, 1), token, jnp.int32))
+        for name in self.layer_names:
+            x, caches[name] = fns["layer_decode"](
+                w[name], x, caches[name], jnp.int32(pos))
+        return fns["head"](w["head"], x), caches
+
+    def decode_batch(self, tokens, caches, pos):
+        """Stacked draft step for the serving scheduler: ``tokens``
+        (R, 1) fed at ragged per-row slots ``pos`` (R,); returns
+        (logits (R, V), caches with leading row dim R)."""
+        fns, w = self.fns, self.weights
+        x = fns["embed"](w["embed"], jnp.asarray(tokens, jnp.int32))
+        pos = jnp.asarray(pos, jnp.int32)
+        for name in self.layer_names:
+            x, caches[name] = fns["layer_decode"](
+                w[name], x, caches[name], pos)
+        return fns["head"](w["head"], x), caches
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding knobs for ``run_generate(speculative=...)``.
+
+    ``depth`` draft tokens are proposed per round (the planner's
+    ``spec_depth``); the draft checkpoint must fit resident next to the
+    pinned window — the budget check charges it as extra resident
+    bytes."""
+    draft_dir: str
+    draft_cfg: ModelConfig
+    depth: int = 4
 
 
 class PipeloadEngine:
@@ -499,14 +603,21 @@ class PipeloadEngine:
                                 **self._expert_stats(snap))
 
     def run_generate(self, tokens, new_tokens: int, *,
-                     kv_cache: bool = False
+                     kv_cache: bool = False,
+                     speculative: Optional[SpecConfig] = None
                      ) -> Tuple[jnp.ndarray, RunStats]:
         """GPT-style generation.
 
         ``kv_cache=False`` reproduces the paper's engine: re-run the full
         load+prefix pipeline for EVERY generated token (§V-B2).
         ``kv_cache=True`` prefills once, then decodes token-by-token against
-        per-layer KV caches (see module docstring)."""
+        per-layer KV caches (see module docstring).
+        ``speculative`` (a ``SpecConfig``; requires ``page_size``) runs
+        the draft/verify loop: a pinned draft proposes ``depth`` tokens
+        per round and ONE stacked weight-stream round verifies them all
+        — greedy-token-identical to the non-speculative paths."""
+        if speculative is not None:
+            return self._generate_spec(tokens, new_tokens, speculative)
         if kv_cache:
             return self._generate_kv(tokens, new_tokens)
         events: List[Tuple[float, str, str]] = []
@@ -695,6 +806,227 @@ class PipeloadEngine:
                               **self._expert_stats(snap))
 
     # ------------------------------------------------------------------
+    def _draft_model(self, spec: SpecConfig) -> DraftModel:
+        """One DraftModel per checkpoint dir, cached across runs (the
+        benchmark calls run_generate repeatedly; re-reading the draft
+        from disk each run would charge its load to the decode phase)."""
+        cache = getattr(self, "_drafts", None)
+        if cache is None:
+            cache = self._drafts = {}
+        key = str(spec.draft_dir)
+        if key not in cache:
+            cache[key] = DraftModel(spec.draft_dir, spec.draft_cfg)
+        return cache[key]
+
+    def _generate_spec(self, tokens, new_tokens: int, spec: SpecConfig
+                       ) -> Tuple[jnp.ndarray, RunStats]:
+        """Speculative draft/verify generation over the PAGED cache.
+
+        Each round: the pinned draft proposes up to ``spec.depth``
+        tokens (plain resident-model decodes, no weight stream), the
+        target scores the whole window — last committed token + all
+        proposals — in ONE stacked pipeline round
+        (``layer_verify_paged``), and the longest agreeing prefix plus
+        the target's own next pick commits.  Draft writes land on a
+        copy-on-write BRANCH of the block table, so a rejected suffix
+        rolls back by dropping page refcounts (O(pages), never a copy).
+        Greedy outputs are token-identical to the non-speculative paths:
+        every committed token is the argmax of target logits over an
+        exactly-equal attention mask, regardless of what the draft
+        proposed."""
+        from repro.core.kv_pages import BlockTable, PagePool
+
+        if not self.page_size:
+            raise ValueError("speculative decoding needs the paged KV "
+                             "cache: construct the engine with page_size")
+        if "layer_verify_paged" not in self.fns:
+            raise ValueError(
+                "speculative decoding needs the stacked GQA verify path; "
+                f"config {self.cfg.name} (attention={self.cfg.attention}, "
+                f"sliding_window={self.cfg.sliding_window}) only supports "
+                "the generic gather path")
+        if new_tokens <= 0:
+            return jnp.asarray(tokens), RunStats(self.mode, self.m, 0.0, 0,
+                                                 [], kv_cache=True)
+        toks_in = jnp.asarray(tokens)
+        b, s0 = toks_in.shape
+        if b != 1:
+            raise ValueError("run_generate(speculative=...) is the "
+                             "single-request path; use the scheduler's "
+                             "spec_depth for batched serving")
+        depth = max(1, int(spec.depth))
+        w_max = depth + 1
+        ps = self.page_size
+        names = self.layer_names
+        n = len(names)
+        total = s0 + new_tokens
+        nb = pages_for(total, ps)
+        page_bytes = n * self.cfg.cache_bytes(1, ps)
+        draft = self._draft_model(spec)
+        draft_cache_bytes = draft.cache_bytes(1, total)
+        extra = draft.total_bytes + draft_cache_bytes
+        # feasibility at the WORST mapped-page count: the full-length
+        # table plus one COW copy of the window's write page (branch
+        # growth past the committed length is new pages the rollback
+        # returns, but they are live during the verify round)
+        cache_total = (nb + pages_for(w_max, ps) + 1) * page_bytes
+        self._check_kv_budget(cache_total, extra_resident=extra)
+
+        events: List[Tuple[float, str, str]] = []
+        ledger = _Ledger(self.budget)
+        t0 = time.perf_counter()
+        self._ensure_aux(ledger, events, t0)
+        draft.pin(ledger)
+        events.append((time.perf_counter() - t0, "draft_pin",
+                       str(draft.total_bytes)))
+        ledger.acquire(draft_cache_bytes, lambda: False)
+
+        toks: List[int] = [int(t) for t in np.asarray(toks_in).reshape(-1)]
+        pool = PagePool(ps, page_bytes, ledger)
+        pool_rows = nb + pages_for(w_max, ps) + 2
+        table = BlockTable([pool.alloc() for _ in range(pages_for(s0, ps))])
+
+        # ---- draft prefill (resident; overlaps nothing — it is cheap)
+        _, dcaches = draft.prefill(toks_in, total)
+        draft_pos = s0                   # draft-cache slots that match toks
+
+        # ---- target prefill: pipelined cache capture, scattered into
+        # the page pool (pad to the page boundary so rows split evenly)
+        pad_len = pages_for(s0, ps) * ps
+        caches: Dict[str, dict] = {}
+
+        def prefill_apply(k, w, h):
+            h, cache = self._layer_cache(k, w, h, pad_len)
+            h.block_until_ready()
+            caches[names[k]] = cache
+            events.append((time.perf_counter() - t0, "cache_alloc",
+                           names[k]))
+            return h
+
+        x = self.fns["embed"](self._resident["embed"], toks_in)
+        if self.mode == "baseline":
+            raise ValueError("speculative decoding needs a pipelined mode")
+        x = self._run_pipeline(x, ledger, events, t0,
+                               self.mode == "pipeload",
+                               apply_fn=prefill_apply)
+        logits = self.fns["head"](self._resident["head"], x)
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+        generated = 1
+
+        # physical pools: (pool_rows, ps, ...) per layer leaf, prefill
+        # rows scattered into this request's own pages
+        pids = jnp.asarray(table.pages, jnp.int32)
+        pools: Dict[str, dict] = {}
+        for name in names:
+            pools[name] = jax.tree.map(
+                lambda a: jnp.zeros((pool_rows, ps) + a.shape[2:],
+                                    a.dtype).at[pids].set(
+                    a[0].reshape((len(table.pages), ps) + a.shape[2:])),
+                caches[name])
+        caches.clear()
+        prefill_s = time.perf_counter() - t0
+
+        # ---- draft/verify rounds
+        spec_rounds = draft_tokens = accepted = 0
+        while generated < new_tokens:
+            k_prop = min(depth, new_tokens - generated - 1)
+            # 1. draft proposes: catch up on committed tokens it has not
+            # seen (<= 2 feeds after the first round), then chain k_prop
+            # proposals off its own greedy picks
+            logits_d = None
+            for t in toks[draft_pos:]:
+                logits_d, dcaches = draft.decode(t, dcaches, draft_pos)
+                draft_pos += 1
+            props: List[int] = []
+            for j in range(k_prop):
+                nxt = int(jnp.argmax(logits_d, -1)[0])
+                props.append(nxt)
+                if j < k_prop - 1:
+                    logits_d, dcaches = draft.decode(nxt, dcaches,
+                                                     draft_pos)
+                    draft_pos += 1
+            # 2. branch the block table copy-on-write and map the verify
+            # window's write range [pos0, pos0 + w_r)
+            pos0 = len(toks) - 1         # slot of the last committed token
+            w_r = k_prop + 1
+            br = table.branch(pool)
+            while len(br.pages) < pages_for(pos0 + w_r, ps):
+                br.pages.append(pool.alloc())
+            cow: List[Tuple[int, int]] = []
+            for pidx in range(pos0 // ps,
+                              pages_for(pos0 + w_r, ps)):
+                swap = br.cow(pidx, pool)
+                if swap is not None:
+                    cow.append(swap)
+            if cow:
+                old = jnp.asarray([o for o, _ in cow], jnp.int32)
+                new = jnp.asarray([nn for _, nn in cow], jnp.int32)
+                pools = {name: jax.tree.map(
+                    lambda a: a.at[new].set(a[old]), c)
+                    for name, c in pools.items()}
+            # 3. ONE stacked weight-stream round scores the window
+            tab = np.zeros((1, nb), np.int32)
+            tab[0, :len(br.pages)] = br.pages
+            tab_j = jnp.asarray(tab)
+            pos_j = jnp.asarray([pos0], jnp.int32)
+            window = jnp.asarray([[toks[-1]] + props], jnp.int32)
+            x = self.fns["embed"](self._resident["embed"], window)
+
+            def verify_apply(k, w, h):
+                h, pools[names[k]] = self.fns["layer_verify_paged"](
+                    w, h, pools[names[k]], tab_j, pos_j)
+                h.block_until_ready()
+                return h
+
+            events.append((time.perf_counter() - t0, "spec_round",
+                           f"w={w_r}"))
+            x = self._run_pipeline(x, ledger, events, t0,
+                                   self.mode == "pipeload",
+                                   apply_fn=verify_apply)
+            logits = self.fns["head_all"](self._resident["head"], x)
+            greedy = np.asarray(jnp.argmax(logits[0], -1))       # (w_r,)
+            # 4. accept the longest agreeing prefix + the target's own
+            # next pick (the "bonus" token — always correct: its context
+            # is fully committed)
+            a = 0
+            while a < k_prop and props[a] == int(greedy[a]):
+                a += 1
+            old_len = len(toks)
+            toks.extend(props[:a])
+            toks.append(int(greedy[a]))
+            generated += a + 1
+            # 5. rollback: drop refcounts past the committed length —
+            # rejected suffix pages unmap without copies — then commit
+            # the branch as the new table
+            br.rollback(pool, pages_for(pos0 + a + 1, ps))
+            table.release_all(pool)
+            table = br
+            # draft-cache slots still agreeing with toks: everything it
+            # had, minus proposals past the accepted prefix
+            draft_pos = old_len + max(0, min(a, k_prop - 1))
+            spec_rounds += 1
+            draft_tokens += k_prop
+            accepted += a
+
+        out = jnp.asarray(np.asarray(toks)[None]).astype(toks_in.dtype)
+        out.block_until_ready()
+        lat = time.perf_counter() - t0
+        table.release_all(pool)
+        ledger.release(draft_cache_bytes)
+        draft.unpin(ledger)
+        return out, RunStats(self.mode, self.m, lat, ledger.peak, events,
+                             loads=sum(1 for e in events
+                                       if e[1] == "load_end"),
+                             streamed_bytes=self._streamed(events),
+                             new_tokens=new_tokens, prefill_s=prefill_s,
+                             decode_s=lat - prefill_s,
+                             cache_bytes=pool.mapped_peak_bytes,
+                             kv_cache=True, spec_depth=depth,
+                             spec_rounds=spec_rounds,
+                             draft_tokens=draft_tokens,
+                             accepted_tokens=accepted)
+
+    # ------------------------------------------------------------------
     # Continuous-batching rounds (core/scheduler.py drives these)
     # ------------------------------------------------------------------
     def run_batch_round(self, ledger: _Ledger, events, t0, *,
@@ -748,10 +1080,21 @@ class PipeloadEngine:
         names = self.layer_names
         prefill_caches: List[Dict[str, dict]] = [{} for _ in prefill_xs]
 
+        if (decode_x is not None and decode_x.shape[1] > 1
+                and paged_pools is None):
+            raise ValueError(
+                "stacked multi-token decode (speculative verify) needs "
+                "paged pools; dense decode_caches take one token per "
+                "round")
+
         def apply_fn(k, w, state):
             dx, pxs = state
             if dx is not None and paged_pools is not None:
-                dx, paged_pools[names[k]] = self.fns["layer_decode_paged"](
+                # W>1 stacked states = a speculative verify round: each
+                # request's window [pos, pos+W) scores in one pass
+                fn = (self.fns["layer_verify_paged"] if dx.shape[1] > 1
+                      else self.fns["layer_decode_paged"])
+                dx, paged_pools[names[k]] = fn(
                     w, dx, paged_pools[names[k]], decode_tables,
                     decode_pos)
                 dx.block_until_ready()
@@ -781,7 +1124,8 @@ class PipeloadEngine:
         return dx, caches_out, pxs, prefill_caches
 
     def _kv_floor(self, cache_total: int, *,
-                  expert_floor: Optional[int] = None) -> int:
+                  expert_floor: Optional[int] = None,
+                  extra_resident: int = 0) -> int:
         """Smallest budget that cannot deadlock a KV decode round holding
         ``cache_total`` bytes of cache pages: other layers + all pages +
         the pinned window + one streaming layer.  Non-destroying modes
@@ -789,7 +1133,10 @@ class PipeloadEngine:
         so their floor is the full model + cache.  ``cache_total`` is the
         TOTAL reservation — for continuous batching, the sum over every
         in-flight request — which is what the scheduler's admission
-        control feeds back in before granting a new request its pages."""
+        control feeds back in before granting a new request its pages.
+        ``extra_resident`` adds run-scoped residents outside the four
+        standard tiers — the speculative path's pinned draft model and
+        its dense cache."""
         other = sum(s["bytes"] for s in self.shards.values()
                     if s["kind"] not in ("layer", "expert"))
         layer_sizes = [self.shards[nm]["bytes"] for nm in self.layer_names]
@@ -810,19 +1157,23 @@ class PipeloadEngine:
             else:
                 expert = (self.expert.reserved if self.expert.bound
                           else self.expert.min_ws)
-        return other + cache_total + pinned + streaming + expert
+        return (other + cache_total + pinned + streaming + expert
+                + extra_resident)
 
     def _check_kv_budget(self, cache_total: int, *, inflight: int = 1,
-                         expert_floor: Optional[int] = None):
+                         expert_floor: Optional[int] = None,
+                         extra_resident: int = 0):
         """Raise unless the budget clears the decode floor for the full
         multi-request reservation (``cache_total`` bytes across
         ``inflight`` concurrent requests); below it the pipeline deadlocks
         with every loader parked on S_stop.  ``expert_floor`` overrides
         the expert-cache term with the workload's shrinkable minimum
-        (see ``_kv_floor``)."""
+        (see ``_kv_floor``); ``extra_resident`` adds the speculative
+        draft's pinned bytes."""
         if self.budget is None:
             return
-        floor = self._kv_floor(cache_total, expert_floor=expert_floor)
+        floor = self._kv_floor(cache_total, expert_floor=expert_floor,
+                               extra_resident=extra_resident)
         if self.budget < floor:
             per_req = cache_total // max(inflight, 1)
             raise ValueError(

@@ -25,7 +25,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence
 
 from repro.checkpoint.partition import ensure_quantized
-from repro.core.engine import PipeloadEngine, RunStats
+from repro.core.engine import DraftModel, PipeloadEngine, RunStats
 from repro.core.planner import GenPlanEntry, PlanEntry, plan, plan_generate
 from repro.core.profiler import load_profile, profile_model, save_profile
 from repro.models.config import ModelConfig
@@ -100,7 +100,10 @@ class Hermes:
                       max_inflight: int = 1,
                       quants: Optional[Sequence[Optional[str]]] = None,
                       page_sizes: Sequence[int] = (),
-                      shared_prefix_len: int = 0) -> List[GenPlanEntry]:
+                      shared_prefix_len: int = 0,
+                      spec_depths: Sequence[int] = (),
+                      spec_draft: Optional[Dict] = None
+                      ) -> List[GenPlanEntry]:
         """Generation-aware schedule: joint (num_agents, pin_window) with
         KV-cache bytes charged against the budget.  ``max_inflight > 1``
         additionally searches the continuous-batching in-flight count
@@ -110,7 +113,9 @@ class Hermes:
         widens it over PAGED KV reservations (core/kv_pages.py) —
         ``shared_prefix_len`` tells the model how many leading prompt
         tokens the workload's requests share, whose full pages are
-        charged once across the batch."""
+        charged once across the batch; ``spec_depths`` + ``spec_draft``
+        widen it over SPECULATIVE verify depths (a pinned draft's bytes,
+        cache row and acceptance rate — see ``planner.plan_generate``)."""
         cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
         prof = (self.profile() if quants is None
                 else self._quant_profiles(quants, batch=1, seq=prompt_len))
@@ -119,7 +124,9 @@ class Hermes:
                              max_pin=max_pin, max_inflight=max_inflight,
                              page_sizes=tuple(page_sizes),
                              total_len=prompt_len + new_tokens,
-                             shared_prefix_len=shared_prefix_len)
+                             shared_prefix_len=shared_prefix_len,
+                             spec_depths=tuple(spec_depths),
+                             spec_draft=spec_draft)
 
     # ---- Execution Engine ----------------------------------------------
     def engine(self, *, mode: str = "pipeload",
@@ -147,7 +154,10 @@ class Hermes:
                   page_sizes: Sequence[int] = (),
                   shared_prefix_len: int = 0,
                   prefix_cache: bool = True,
-                  seed: Optional[int] = None) -> "BatchScheduler":
+                  seed: Optional[int] = None,
+                  draft: Optional["DraftModel"] = None,
+                  spec_depth: Optional[int] = None,
+                  draft_acceptance: float = 0.8) -> "BatchScheduler":
         """Continuous-batching serving facade: plan the
         (num_agents, pin_window, inflight) triple for the budget, build
         the engine, and wrap it in a ``BatchScheduler`` ready for
@@ -157,8 +167,23 @@ class Hermes:
         ``quants`` widens the plan over shard dtype and ``page_sizes``
         over paged KV reservations (``shared_prefix_len`` models the
         workload's common prompt prefix); the engine is built on the
-        winning checkpoint variant with the winning page size."""
+        winning checkpoint variant with the winning page size.  A
+        ``draft`` model adds the SPECULATIVE dimension: ``spec_depth``
+        fixes the verify depth (None = search {1, 2, 4} jointly at the
+        modelled ``draft_acceptance``), and the winning depth — 0 when
+        speculation does not pay at this budget — drives the
+        scheduler's draft-and-verify rounds."""
         from repro.core.scheduler import BatchScheduler
+        spec_kw = {}
+        if draft is not None:
+            depths = ((spec_depth,) if spec_depth else (1, 2, 4))
+            total = max_total_len or prompt_len + new_tokens
+            spec_kw = dict(
+                spec_depths=tuple(d for d in depths if d and d > 0),
+                spec_draft=dict(
+                    bytes=draft.total_bytes,
+                    cache_bytes=draft.cache_bytes(1, total + max(depths)),
+                    acceptance=draft_acceptance))
         g = self.plan_generate([budget_bytes], prompt_len=prompt_len,
                                new_tokens=new_tokens,
                                max_inflight=max_inflight, quants=quants,
@@ -167,7 +192,8 @@ class Hermes:
                                # the plan must not assume prefix hits
                                shared_prefix_len=(shared_prefix_len
                                                   if prefix_cache
-                                                  else 0))[0]
+                                                  else 0),
+                               **spec_kw)[0]
         if not g.feasible:
             raise ValueError(
                 f"no feasible serving schedule for budget {budget_bytes}: "
@@ -186,7 +212,9 @@ class Hermes:
         return BatchScheduler(eng, max_inflight=g.inflight,
                               max_total_len=(max_total_len
                                              or prompt_len + new_tokens),
-                              prefix_cache=prefix_cache, seed=seed)
+                              prefix_cache=prefix_cache, seed=seed,
+                              draft=(draft if g.spec_depth else None),
+                              spec_depth=g.spec_depth)
 
     def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
                 budget_bytes: Optional[int] = None,

@@ -277,3 +277,50 @@ class BlockTable:
         self.pages.clear()
         self.n_shared = 0
         return freed
+
+    # -- speculative branching (copy-on-write off a committed table) ----
+    def branch(self, pool: PagePool) -> "BlockTable":
+        """Map a speculative branch: a new table sharing EVERY page of
+        this one (refcount bumps, zero new bytes, zero copies).  The
+        branch starts fully shared (``n_shared == len(pages)``); the
+        speculator ``cow``s each page before its first write and
+        ``rollback``s the suffix a failed verification leaves behind.
+        Commit = ``release_all`` the parent, keep the branch."""
+        for pid in self.pages:
+            pool.share(pid)
+        return BlockTable(list(self.pages), len(self.pages))
+
+    def cow(self, idx: int, pool: PagePool) -> Optional[Tuple[int, int]]:
+        """Make logical page ``idx`` privately writable.  Shared pages
+        (a sibling or the committed parent holds them) are swapped for a
+        fresh alloc — the caller must copy the page's contents
+        ``old -> new`` in the physical pool; returns ``(old, new)`` to
+        batch that copy.  Already-private pages return None (write in
+        place)."""
+        pid = self.pages[idx]
+        if not pool.is_shared(pid):
+            if idx < self.n_shared:
+                self.n_shared = idx
+            return None
+        new = pool.alloc()
+        pool.release(pid)        # sibling keeps it: never frees here
+        pool.stats.cow_copies += 1
+        self.pages[idx] = new
+        if idx < self.n_shared:
+            self.n_shared = idx
+        return pid, new
+
+    def rollback(self, pool: PagePool, keep_pages: int,
+                 tree: Optional[PrefixTree] = None) -> int:
+        """Drop every page past the first ``keep_pages`` — the O(pages)
+        rejection path: a refused speculative suffix is unmapped by
+        refcount drops alone, never a copy.  Returns pages freed."""
+        freed = 0
+        while len(self.pages) > max(keep_pages, 0):
+            pid = self.pages.pop()
+            if pool.release(pid):
+                freed += 1
+                if tree is not None:
+                    tree.forget(pid)
+        self.n_shared = min(self.n_shared, len(self.pages))
+        return freed

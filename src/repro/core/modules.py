@@ -53,7 +53,7 @@ from repro.checkpoint import quant as qz
 from repro.models import attention as attn
 from repro.models import common, moe
 from repro.models.dense_lm import (layer_decode, layer_decode_paged,
-                                   layer_prefill)
+                                   layer_prefill, layer_verify_paged)
 from repro.models.config import DENSE, MOE, VLM, ModelConfig
 
 # Families the PIPELOAD engine can execute at shard granularity.  The
@@ -179,6 +179,20 @@ def build_module_fns(cfg: ModelConfig,
         return out, pools
 
     @jax.jit
+    def layer_verify_paged_apply(weights, x, pools, tables, pos):
+        """Stacked W-token speculative verify against the paged cache:
+        ``x`` (B, W, D) holds each request's last committed token plus
+        its draft proposals, ``pos`` (B,) the cache slot of the FIRST
+        stacked token.  One weight stream scores the whole window —
+        query i attends slots <= pos + i, so the outputs match W
+        sequential ``layer_decode_paged`` steps."""
+        weights = qz.dequant_tree(weights)
+        b = tables.shape[0]
+        posv = jnp.asarray(pos, jnp.int32).reshape(b)
+        return layer_verify_paged(weights, x, cfg, pools, tables, posv,
+                                  attn_impl=impl)
+
+    @jax.jit
     def head_apply(weights, x):
         weights = qz.dequant_tree(weights)
         h = common.rms_norm(x, weights["final_norm"], cfg.norm_eps)
@@ -186,11 +200,26 @@ def build_module_fns(cfg: ModelConfig,
             return (h[:, -1] @ weights["lm_head"]).astype(jnp.float32)
         return h[:, -1].astype(jnp.float32)
 
+    @jax.jit
+    def head_all_apply(weights, x):
+        """Full-width head: logits for EVERY stacked position (B, W, V)
+        — the verify step needs the target's greedy pick at each slot
+        of the speculation window, not just the last."""
+        weights = qz.dequant_tree(weights)
+        h = common.rms_norm(x, weights["final_norm"], cfg.norm_eps)
+        if "lm_head" in weights:
+            return (h @ weights["lm_head"]).astype(jnp.float32)
+        return h.astype(jnp.float32)
+
     fns = {"embed": embed_apply, "layer": layer_apply,
            "layer_cache": layer_cache_apply,
            "layer_decode": layer_decode_apply,
            "layer_decode_paged": layer_decode_paged_apply,
-           "head": head_apply}
+           "head": head_apply, "head_all": head_all_apply}
+    if gqa_paged:
+        # the stacked verify path is GQA-only (no windowed/MLA variant);
+        # gating the key lets callers feature-test speculation support
+        fns["layer_verify_paged"] = layer_verify_paged_apply
     if cfg.family == MOE:
         fns.update(_build_moe_stream_fns(cfg, impl))
     return fns

@@ -90,6 +90,8 @@ class GenPlanEntry:
     dtype: Optional[str] = None       # shard dtype when searching over quant
     expert_cache_bytes: int = 0       # ExpertCache size (expert-split MoE)
     page_size: int = 0                # KV page size (0 = dense reservation)
+    spec_depth: int = 0               # draft tokens per verify round
+    draft_bytes: int = 0              # pinned draft + per-req cache rows
 
 
 # ---------------------------------------------------------------------------
@@ -414,7 +416,10 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                   max_inflight: int = 1,
                   page_sizes: Tuple[int, ...] = (),
                   total_len: Optional[int] = None,
-                  shared_prefix_len: int = 0) -> List[GenPlanEntry]:
+                  shared_prefix_len: int = 0,
+                  spec_depths: Tuple[int, ...] = (),
+                  spec_draft: Optional[Dict] = None
+                  ) -> List[GenPlanEntry]:
     """Joint (num_agents, pin_window, inflight) schedule for KV-cache
     generation and continuous-batching serving — over one profile, or
     ``{dtype: profile}`` to search shard dtype jointly (module docs).
@@ -449,24 +454,63 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     request.  Page size 0 (always searched) is the dense reservation, so
     paging wins only where sharing/rounding actually frees bytes; the
     winning entry's ``page_size`` feeds the engine and scheduler.
+
+    The **speculative dimension** (``spec_depths`` non-empty, needs
+    ``spec_draft`` and ``page_sizes``): each candidate depth ``k`` plays
+    the scheduler's draft-and-verify protocol — a pinned draft
+    (``spec_draft["bytes"]`` resident, plus one
+    ``spec_draft["cache_bytes"]`` dense cache row per in-flight request)
+    proposes ``k`` tokens per round and one stacked verify round scores
+    the whole window, so a round commits
+    ``E(k, a) = (1 - a^(k+1)) / (1 - a)`` tokens in expectation at
+    acceptance rate ``a = spec_draft["acceptance"]``.  The verify round's
+    compute scales by the window width (the weight stream does NOT — the
+    same asymmetry continuous batching exploits, amortised ``E``-fold),
+    the draft's serial chain adds ``k * spec_draft["t_token"]``, and the
+    KV charge grows by the window-overhang pages.  Depth 0 (always
+    searched) is plain decoding, so speculation wins only where the
+    acceptance rate actually buys rounds; the winning entry's
+    ``spec_depth``/``draft_bytes`` feed the scheduler.
     """
     profiles = [(label, _with_decode_times(p))
                 for label, p in _as_profiles(profile)]
     rounds = max(new_tokens - 1, 0)
     if page_sizes and not total_len:
         raise ValueError("page_sizes search requires total_len")
+    if spec_depths and spec_draft is None:
+        raise ValueError("spec_depths search requires spec_draft "
+                         "(draft bytes / cache_bytes / acceptance)")
+    if spec_depths and not page_sizes:
+        raise ValueError("spec_depths search requires page_sizes (the "
+                         "verify window rides the paged KV block tables)")
     ps_grid = [0] + [int(p) for p in page_sizes if p and p > 0]
+    depth_grid = [0] + [int(d) for d in spec_depths if d and d > 0]
+    accept = (min(max(float(spec_draft.get("acceptance", 0.8)), 0.0), 1.0)
+              if spec_draft else 0.0)
+    draft_t = float(spec_draft.get("t_token", 0.0)) if spec_draft else 0.0
 
-    def kv_bytes(n_layers: int, r: int, ps: int) -> int:
+    def kv_bytes(n_layers: int, r: int, ps: int, depth: int = 0) -> int:
         """Total KV reservation the scheduler will charge for ``r``
-        in-flight requests at page size ``ps`` (0 = dense)."""
+        in-flight requests at page size ``ps`` (0 = dense) and verify
+        depth ``depth`` (window-overhang pages + per-request window
+        growth headroom)."""
         if ps == 0:
             return n_layers * cache_bytes_per_layer * r
         tok = cache_bytes_per_layer // total_len      # exact: linear in S
-        pages_per_req = pages_for(total_len, ps)
+        pages_per_req = pages_for(total_len + depth, ps)
         shared = min(shared_prefix_len // ps, pages_per_req)
-        pages = shared + r * (pages_per_req - shared) + r   # + headroom
+        pages = (shared + r * (pages_per_req - shared)
+                 + r * pages_for(depth + 1, ps))      # + headroom
         return n_layers * tok * ps * pages
+
+    def expected_commit(depth: int) -> float:
+        """Tokens one verify round commits in expectation: accepted
+        prefix + the target's bonus token."""
+        if depth == 0:
+            return 1.0
+        if accept >= 1.0:
+            return depth + 1.0
+        return (1.0 - accept ** (depth + 1)) / (1.0 - accept)
 
     def best_at(label, prof, budget, r: int) -> Optional[GenPlanEntry]:
         """Best (m, pin[, expert cache][, page size]) candidate with
@@ -481,12 +525,18 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
         slim = _slim_profile(prof) if moe else prof
         cache_opts = (_expert_cache_grid(slim, r, seq) if moe else [0])
         # paged serving does not support expert-split MoE (the scheduler
-        # rejects the combination), so MoE profiles search dense only
+        # rejects the combination), so MoE profiles search dense only;
+        # speculative depths need the paged verify window, so depth > 0
+        # pairs only with ps > 0
         pss = [0] if moe else ps_grid
         best: Optional[GenPlanEntry] = None
-        for ps, cbytes in [(p, c) for p in pss for c in cache_opts]:
-            cache_total = kv_bytes(n, r, ps)
-            resident = cache_total + cbytes
+        grid = [(p, c, d) for p in pss for c in cache_opts
+                for d in (depth_grid if p else [0])]
+        for ps, cbytes, depth in grid:
+            cache_total = kv_bytes(n, r, ps, depth)
+            dbytes = ((spec_draft["bytes"]
+                       + r * spec_draft["cache_bytes"]) if depth else 0)
+            resident = cache_total + cbytes + dbytes
             derived = {}   # (pre_prof, dec_prof) per m — pin-independent
             for pin in range(pin_cap + 1):
                 # tier 1: analytic feasibility prunes the (m, pin) grid
@@ -526,23 +576,32 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                     pre_lat, pre_peak = simulate(
                         pre_prof, m, budget, retain_window=pin,
                         extra_resident_bytes=resident, batch=r)
+                    # a verify round applies each streamed layer to the
+                    # whole (depth + 1)-token window — compute scales,
+                    # the weight stream does not
                     dec_lat, dec_peak = simulate(
                         dec_prof, m, budget, pin_window=pin,
                         extra_resident_bytes=resident,
-                        t_comp_key="t_decode", batch=r)
-                    total = pre_lat + rounds * dec_lat
+                        t_comp_key="t_decode", batch=r * (depth + 1))
+                    exp = expected_commit(depth)
+                    n_rounds = math.ceil(rounds / exp) if rounds else 0
+                    round_lat = dec_lat + depth * draft_t
+                    total = pre_lat + n_rounds * round_lat
                     peak = max(pre_peak, dec_peak)
                     ok = math.isfinite(total) and (budget is None
                                                    or peak <= budget)
-                    tput = r / dec_lat \
-                        if (dec_lat and math.isfinite(dec_lat)) else 0.0
+                    tput = r * exp / round_lat \
+                        if (round_lat and math.isfinite(round_lat)) \
+                        else 0.0
                     cand = GenPlanEntry(budget, m, pin, total, pre_lat,
-                                        dec_lat, int(peak), cache_total,
+                                        round_lat, int(peak), cache_total,
                                         ok, inflight=r,
                                         predicted_throughput_tps=tput,
                                         dtype=label,
                                         expert_cache_bytes=cbytes,
-                                        page_size=ps)
+                                        page_size=ps,
+                                        spec_depth=depth,
+                                        draft_bytes=dbytes)
                     if _gen_better(cand, best):
                         best = cand
         return best

@@ -84,7 +84,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import PipeloadEngine, _Ledger
+from repro.core.engine import DraftModel, PipeloadEngine, _Ledger
 from repro.core.kv_pages import BlockTable, PagePool, PrefixTree, pages_for
 
 
@@ -102,6 +102,7 @@ class Request:
     finished_round: int = -1
     cache_bytes: int = 0          # ledger reservation while in flight
     table: Optional[BlockTable] = None   # paged mode: page ids + n_shared
+    draft_pos: int = 0            # speculative: draft cache slots valid
 
     @property
     def done(self) -> bool:
@@ -142,6 +143,11 @@ class ServeStats:
     cow_copies: int = 0            # copy-on-write page swaps
     preemptions: int = 0           # requests bounced back to the queue
     pool_pages_peak: int = 0       # high-water MAPPED page count
+    # speculative-decoding extras (0 when spec_depth is unset)
+    spec_depth: int = 0            # draft tokens proposed per round
+    spec_rounds: int = 0           # verify rounds executed
+    draft_tokens: int = 0          # proposals the draft emitted
+    accepted_tokens: int = 0       # proposals the target committed
 
     @property
     def tokens_per_s(self) -> float:
@@ -152,6 +158,12 @@ class ServeStats:
         """Fraction of expert activations served from the ExpertCache."""
         total = self.expert_hits + self.expert_misses
         return self.expert_hits / total if total else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals the target accepted."""
+        return (self.accepted_tokens / self.draft_tokens
+                if self.draft_tokens else 0.0)
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -171,7 +183,9 @@ class BatchScheduler:
                  max_total_len: int = 128,
                  page_size: Optional[int] = None,
                  prefix_cache: bool = True,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 draft: Optional[DraftModel] = None,
+                 spec_depth: int = 0):
         if engine.mode == "baseline":
             raise ValueError("continuous batching needs a pipelined mode "
                              "(pipeload / pipeswitch)")
@@ -184,6 +198,19 @@ class BatchScheduler:
         if page_size is None:
             page_size = engine.page_size
         self.page_size = page_size if page_size and page_size > 0 else None
+        # speculative serving: a pinned draft proposes spec_depth tokens
+        # per round per request and one stacked verify round scores them
+        self.spec_depth = max(0, spec_depth) if draft is not None else 0
+        self.draft = draft if self.spec_depth else None
+        if self.spec_depth:
+            if not self.page_size:
+                raise ValueError(
+                    "speculative serving needs paged KV (the verify "
+                    "window rides the block tables); set page_size")
+            if "layer_verify_paged" not in engine.fns:
+                raise ValueError(
+                    "engine's model fns lack layer_verify_paged "
+                    "(speculative verify); architecture unsupported")
         self.seed = seed
         self.queue: List[Request] = []      # FIFO by (arrival_round, rid)
         self.inflight: List[Request] = []
@@ -214,7 +241,11 @@ class BatchScheduler:
                     "MoE checkpoints yet; repartition whole-layer or drop "
                     "page_size")
             ps = self.page_size
-            self._nb = pages_for(max_total_len, ps)       # table width
+            # speculative verify writes K/V for the whole window
+            # [pos, pos + depth]; the last round's window can run past
+            # max_total_len, so tables carry the overhang slots (the
+            # extra K/V is masked garbage, freed at retirement)
+            self._nb = pages_for(max_total_len + self.spec_depth, ps)
             self._page_bytes = (len(engine.layer_names)
                                 * engine.cfg.cache_bytes(1, ps))
             self.pool = PagePool(ps, self._page_bytes, self.ledger)
@@ -223,6 +254,22 @@ class BatchScheduler:
             # sized ONCE so jitted decode shapes never change (the
             # ledger charges only MAPPED pages; these rows are buffer)
             self._pool_rows = self.max_inflight * self._nb + 2
+        # ---- speculative state (draft pinned for the whole session) ----
+        self._draft_caches: Optional[Dict[str, dict]] = None  # (R, T, ...)
+        self._spec_rounds = 0
+        self._draft_tokens = 0
+        self._accepted_tokens = 0
+        if self.spec_depth:
+            # per-request growth headroom: a verify round can map up to
+            # a full window of fresh pages at once
+            self._req_headroom = pages_for(self.spec_depth + 1,
+                                           self.page_size)
+            self._draft_total = max_total_len + self.spec_depth
+            self._draft_cache_bytes = self.draft.cache_bytes(
+                1, self._draft_total)
+            self.draft.pin(self.ledger)   # resident for the session
+        else:
+            self._req_headroom = 1 if self.page_size else 0
         self._expert_snap = (engine.expert.snapshot()
                              if engine.expert is not None else None)
         # the widest fetch this workload can lock (a max-length prompt's
@@ -252,15 +299,19 @@ class BatchScheduler:
                 f"{self.max_total_len}")
         if self.page_size:
             # worst case = every page of its final length, unshared,
-            # PLUS the one-page admission headroom (_fits_paged charges
-            # it per in-flight request — without it a request whose
-            # total fits the budget exactly would be accepted here yet
-            # never admitted, spinning run() forever).  This is the
-            # guarantee growth-with-preemption leans on: a request
-            # ALONE can always map its next page.
-            worst = ((pages_for(len(prompt) + max_new_tokens,
-                                self.page_size) + 1) * self._page_bytes)
-            self.engine._check_kv_budget(worst, inflight=1)
+            # PLUS the admission headroom (_fits_paged charges it per
+            # in-flight request — without it a request whose total fits
+            # the budget exactly would be accepted here yet never
+            # admitted, spinning run() forever).  This is the guarantee
+            # growth-with-preemption leans on: a request ALONE can
+            # always map its next page (its whole verify window, in
+            # speculative mode — where the draft and its cache row are
+            # charged as extra residents too).
+            worst = ((pages_for(len(prompt) + max_new_tokens
+                                + self.spec_depth, self.page_size)
+                      + self._req_headroom) * self._page_bytes)
+            self.engine._check_kv_budget(
+                worst, inflight=1, extra_resident=self._spec_resident(1))
             per_req = worst
         else:
             self.engine._check_kv_budget(self._per_req_cache, inflight=1,
@@ -303,15 +354,28 @@ class BatchScheduler:
         return False
 
     # ---- paged-mode admission / growth / preemption ------------------
+    def _spec_resident(self, inflight: int) -> int:
+        """Speculative mode's extra resident bytes: the pinned draft
+        plus one dense draft-cache row per in-flight request."""
+        if not self.spec_depth:
+            return 0
+        return (self.draft.total_bytes
+                + inflight * self._draft_cache_bytes)
+
     def _fits_paged(self, extra_pages: int, inflight_after: int) -> bool:
         """Paged decode floor: pages actually mapped, plus the new pages,
-        plus ONE page of growth headroom per in-flight request."""
+        plus growth headroom per in-flight request (one page — a whole
+        verify window of pages in speculative mode, where the pinned
+        draft and its cache rows are charged as extra residents too)."""
         eng = self.engine
         if eng.budget is None:
             return True
-        cache = ((self.pool.mapped_pages + extra_pages + inflight_after)
+        cache = ((self.pool.mapped_pages + extra_pages
+                  + inflight_after * self._req_headroom)
                  * self._page_bytes)
-        return eng._kv_floor(cache) <= eng.budget
+        return (eng._kv_floor(
+            cache, extra_resident=self._spec_resident(inflight_after))
+            <= eng.budget)
 
     def _admit_one_paged(self, req: Request, inflight_after: int) -> bool:
         """Map the request's prompt pages (prefix-tree hits are refcount
@@ -330,12 +394,23 @@ class BatchScheduler:
                               for _ in range(n_pages)], 0
         req.table = BlockTable(pids, n_shared)
         req.tokens = toks
+        if self.spec_depth:
+            # the request's dense draft-cache row lives as long as the
+            # request is in flight (never blocks: _fits_paged charged it
+            # via _spec_resident, and at a boundary nothing streams)
+            self.ledger.acquire(self._draft_cache_bytes, lambda: False)
         return True
 
     def _preempt(self, victim: Request) -> None:
         """Bounce ``victim`` back to the queue, freeing its non-shared
         pages; it re-prefills from its tokens so far on re-admission."""
         victim.table.release_all(self.pool, self.tree)
+        if self.spec_depth:
+            idx = self.inflight.index(victim)
+            self._draft_caches = self._rows_keep(
+                self._draft_caches,
+                [i for i in range(len(self.inflight)) if i != idx])
+            self.ledger.release(self._draft_cache_bytes)
         self.inflight.remove(victim)
         victim.admitted_round = -1
         victim.arrival_round = self.round
@@ -367,8 +442,11 @@ class BatchScheduler:
 
     def _grow_pages(self):
         """Round boundary, before admission: map each in-flight
-        request's write page — grow across page boundaries, and
-        copy-on-write a shared page before its first divergent write."""
+        request's WRITE RANGE — the one page its next token lands in,
+        or, in speculative mode, every page the verify window
+        [pos, pos + depth] touches — growing across page boundaries and
+        copy-on-writing shared pages before their first divergent
+        write."""
         if not self.inflight:
             return
         cow: List[Tuple[Request, int, int]] = []
@@ -376,19 +454,22 @@ class BatchScheduler:
             if req not in self.inflight:    # preempted by an earlier grower
                 continue
             t = req.table
-            pidx = req.pos // self.page_size
-            while len(t.pages) <= pidx:
+            lo = req.pos // self.page_size
+            hi = (req.pos + self.spec_depth) // self.page_size
+            while len(t.pages) <= hi:
                 pid = self._alloc_with_preemption(req)
                 if pid is None:             # req itself was the victim
                     break
                 t.pages.append(pid)
-            if req not in self.inflight:
-                continue
-            pid = t.pages[pidx]
-            if self.pool.is_shared(pid):
+            for pidx in range(lo, hi + 1):
+                if req not in self.inflight:
+                    break
+                pid = t.pages[pidx]
+                if not self.pool.is_shared(pid):
+                    continue
                 new = self._alloc_with_preemption(req)
                 if new is None:             # req preempted: refs already
-                    continue                # dropped by release_all
+                    break                   # dropped by release_all
                 cow.append((req, pid, new))
                 # usually the sibling keeps the old page — but if the
                 # COW alloc preempted that sibling, this drop is the
@@ -505,6 +586,8 @@ class BatchScheduler:
         for req in finished:
             if self.page_size:
                 req.table.release_all(self.pool, self.tree)
+                if self.spec_depth:
+                    self.ledger.release(self._draft_cache_bytes)
             else:
                 self.ledger.release(req.cache_bytes)
                 self._cache_resident -= req.cache_bytes
@@ -536,6 +619,65 @@ class BatchScheduler:
                                *(s[name] for s in stacks))
             for name in stacks[0]}
 
+    # ---- speculative drafting (rows parallel to self.inflight) -------
+    @staticmethod
+    def _rows_keep(stack, keep: List[int]):
+        """Row-filter a stacked cache dict (leaves (R, T, ...))."""
+        if stack is None or not keep:
+            return None
+        idx = np.asarray(keep)
+        return {name: jax.tree.map(lambda a: a[idx], c)
+                for name, c in stack.items()}
+
+    @staticmethod
+    def _rows_concat(stacks):
+        """Concatenate stacked cache dicts along the row dim."""
+        stacks = [s for s in stacks if s is not None]
+        if not stacks:
+            return None
+        if len(stacks) == 1:
+            return stacks[0]
+        return {name: jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                   *(s[name] for s in stacks))
+                for name in stacks[0]}
+
+    def _draft_propose(self) -> List[List[int]]:
+        """One stacked draft pass over every in-flight request: catch the
+        draft cache up to the committed tokens, then chain ``spec_depth``
+        greedy proposals per row.
+
+        Rows may need different catch-up counts (1 after a partial
+        accept, 2 after a full accept — the bonus token was never drafted).
+        The batch feeds every row its last ``C = max(gap)`` committed
+        tokens at their own slots: rows with a smaller gap RE-feed tokens
+        already in their draft cache, overwriting those slots with
+        bitwise-identical K/V (K/V depend only on token and position), so
+        one jitted executable serves the ragged batch."""
+        reqs = self.inflight
+        c = max(len(r.tokens) - r.draft_pos for r in reqs)
+        logits = None
+        for i in range(c):
+            toks = np.asarray([[r.tokens[len(r.tokens) - c + i]]
+                               for r in reqs], np.int32)
+            pos = np.asarray([len(r.tokens) - c + i for r in reqs],
+                             np.int32)
+            logits, self._draft_caches = self.draft.decode_batch(
+                toks, self._draft_caches, pos)
+        for r in reqs:
+            r.draft_pos = len(r.tokens)
+        props: List[List[int]] = [[] for _ in reqs]
+        cur = np.asarray(jnp.argmax(logits, -1), np.int32)      # (R,)
+        for j in range(self.spec_depth):
+            for i in range(len(reqs)):
+                props[i].append(int(cur[i]))
+            if j < self.spec_depth - 1:
+                pos = np.asarray([len(r.tokens) + j for r in reqs],
+                                 np.int32)
+                logits, self._draft_caches = self.draft.decode_batch(
+                    cur[:, None], self._draft_caches, pos)
+                cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+        return props
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One round boundary + (if there is work) one pipeline round.
@@ -557,15 +699,23 @@ class BatchScheduler:
         fns, t0 = eng.fns, self._t0
         self.events.append((time.perf_counter() - t0, "round",
                             str(self.round)))
-        # ---- build the decode batch (stacked last tokens, ragged pos)
-        dec_x = dec_pos = None
+        # ---- build the decode batch (stacked last tokens, ragged pos;
+        # speculative mode widens each row to its verify window
+        # [last committed token, draft proposals...])
+        dec_x = dec_pos = props = None
         if self.inflight:
-            last = np.asarray([[r.tokens[-1]] for r in self.inflight],
-                              np.int32)
             emb = eng._resident.get("embed")
             if emb is None:
                 eng._ensure_aux(self.ledger, self.events, t0)
                 emb = eng._resident["embed"]
+            if self.spec_depth:
+                props = self._draft_propose()
+                last = np.asarray(
+                    [[r.tokens[-1]] + props[i]
+                     for i, r in enumerate(self.inflight)], np.int32)
+            else:
+                last = np.asarray([[r.tokens[-1]] for r in self.inflight],
+                                  np.int32)
             dec_x = fns["embed"](emb, jnp.asarray(last))
             dec_pos = jnp.asarray([r.pos for r in self.inflight], jnp.int32)
         # ---- build prefill jobs for this boundary's admissions
@@ -606,9 +756,39 @@ class BatchScheduler:
                 prefill_total=self.max_total_len)
             self._caches = caches
 
-        # ---- heads: one greedy token per request this round
+        # ---- heads: one greedy token per request this round — or, in
+        # speculative mode, the accepted proposal prefix plus the
+        # target's bonus token
         head = eng._resident["head"]
-        if dec_x is not None:
+        if dec_x is not None and self.spec_depth:
+            logits = fns["head_all"](head, dec_x)              # (R, W, V)
+            greedy = np.asarray(jnp.argmax(logits, -1))        # (R, W)
+            self._spec_rounds += 1
+            for row, req in enumerate(self.inflight):
+                prop = props[row]
+                a = 0
+                while a < len(prop) and prop[a] == int(greedy[row, a]):
+                    a += 1
+                # accepted prefix + the target's token after it, clamped
+                # to the request's remaining token allowance (any prefix
+                # of the commit list is the exact greedy continuation)
+                remaining = req.max_new_tokens - req.generated
+                commit = (prop[:a] + [int(greedy[row, a])])[:remaining]
+                old_len = len(req.tokens)
+                req.tokens.extend(commit)
+                req.generated += len(commit)
+                # draft slots old_len..old_len+depth-2 hold the proposal
+                # K/V; they stay valid while the proposal matched the
+                # committed token
+                req.draft_pos = old_len + max(
+                    0, min(a, self.spec_depth - 1, len(commit)))
+                # count only proposals that could possibly commit — the
+                # window always spans the full depth (uniform jitted
+                # shapes), but near max_new_tokens the tail is clamped
+                # away and should not read as rejections
+                self._draft_tokens += min(len(prop), remaining)
+                self._accepted_tokens += min(a, remaining)
+        elif dec_x is not None:
             logits = fns["head"](head, dec_x)                  # (R, V)
             nxt = np.asarray(jnp.argmax(logits, -1))
             for row, req in enumerate(self.inflight):
@@ -618,6 +798,18 @@ class BatchScheduler:
             logits = fns["head"](head, pre_outs[i])            # (1, V)
             req.tokens.append(int(jnp.argmax(logits, -1)[0]))
             req.generated += 1           # re-prefills resume, not reset
+        if self.spec_depth and admitted:
+            # seed each admission's draft-cache row from its own prompt
+            # prefill (the generated first token is caught up next round)
+            rows = []
+            for req in admitted:
+                toks = jnp.asarray(np.asarray(req.tokens[:-1],
+                                              np.int32)[None])
+                _, dc = self.draft.prefill(toks, self._draft_total)
+                req.draft_pos = len(req.tokens) - 1
+                rows.append(dc)
+            self._draft_caches = self._rows_concat(
+                [self._draft_caches] + rows)
 
         # ---- merge admissions, then retire mid-stream finishers
         if not self.page_size:
@@ -630,6 +822,9 @@ class BatchScheduler:
             self.inflight = [self.inflight[i] for i in keep]
             if not self.page_size:       # paged rows live in the pool
                 self._drop_rows(keep)
+            elif self.spec_depth:
+                self._draft_caches = self._rows_keep(self._draft_caches,
+                                                     keep)
             self._retire(finished)
         self.round += 1
         return bool(self.inflight or self.queue)
@@ -657,6 +852,12 @@ class BatchScheduler:
                 cow_copies=self.pool.stats.cow_copies,
                 preemptions=self.preemptions,
                 pool_pages_peak=self.pool.mapped_peak)
+        spec_kw = {}
+        if self.spec_depth:
+            spec_kw = dict(spec_depth=self.spec_depth,
+                           spec_rounds=self._spec_rounds,
+                           draft_tokens=self._draft_tokens,
+                           accepted_tokens=self._accepted_tokens)
         # paged mode: the pool records the true mapped high-water on
         # every alloc (an end-of-boundary sample would miss pages a
         # mid-loop preemption freed again)
@@ -669,7 +870,7 @@ class BatchScheduler:
             new_tokens=sum(r.generated for r in self.done.values()),
             requests=len(self.done), max_inflight_seen=self._max_seen,
             cache_bytes_peak=cache_peak, events=self.events,
-            seed=self.seed, **paged_kw, **expert_kw)
+            seed=self.seed, **paged_kw, **expert_kw, **spec_kw)
         return outs, stats
 
     # ------------------------------------------------------------------
@@ -695,14 +896,36 @@ class BatchScheduler:
         if self.page_size:
             # one fixed-size pool per leaf: compile the paged decode at
             # every batch size (the pool rows never change, so these are
-            # the serving executables)
+            # the serving executables).  Speculative serving decodes
+            # exclusively through W-wide verify windows, so it warms
+            # those shapes instead — plus the draft's own executables.
             pool1 = self._pool_like(c1)
+            w = self.spec_depth + 1
             for r in range(1, self.max_inflight + 1):
                 tbr = jnp.zeros((r, self._nb), jnp.int32)
-                xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
-                dr, _ = fns["layer_decode_paged"](
-                    w0, xr, pool1, tbr, jnp.zeros((r,), jnp.int32))
-                fns["head"](head, dr).block_until_ready()
+                if self.spec_depth:
+                    xr = fns["embed"](emb, jnp.zeros((r, w), jnp.int32))
+                    dr, _ = fns["layer_verify_paged"](
+                        w0, xr, pool1, tbr, jnp.zeros((r,), jnp.int32))
+                    fns["head_all"](head, dr).block_until_ready()
+                else:
+                    xr = fns["embed"](emb, jnp.zeros((r, 1), jnp.int32))
+                    dr, _ = fns["layer_decode_paged"](
+                        w0, xr, pool1, tbr, jnp.zeros((r,), jnp.int32))
+                    fns["head"](head, dr).block_until_ready()
+            if self.spec_depth:
+                for s in sorted(set(int(p) for p in prompt_lens)):
+                    self.draft.prefill(jnp.zeros((1, s), jnp.int32),
+                                       self._draft_total)
+                _, dc1 = self.draft.prefill(jnp.zeros((1, 1), jnp.int32),
+                                            self._draft_total)
+                for r in range(1, self.max_inflight + 1):
+                    dcr = {name: jax.tree.map(
+                        lambda a: jnp.concatenate([a] * r), c)
+                        for name, c in dc1.items()}
+                    self.draft.decode_batch(
+                        jnp.zeros((r, 1), jnp.int32), dcr,
+                        jnp.zeros((r,), jnp.int32))
         else:
             for r in range(1, self.max_inflight + 1):
                 cr = jax.tree.map(lambda a: jnp.concatenate([a] * r), c1)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash_attn
 from repro.kernels.flash_decode import (flash_decode as _flash_decode,
                                         flash_decode_partial as _fd_partial)
-from repro.kernels.paged_decode import paged_flash_decode as _paged_decode
+from repro.kernels.paged_decode import (paged_flash_decode as _paged_decode,
+                                        paged_flash_verify as _paged_verify)
 from repro.kernels.streamed_matmul import (quantized_matmul as _qmatmul,
                                            streamed_matmul as _matmul)
 
@@ -69,4 +70,14 @@ def paged_decode(q, k_pages, v_pages, tables, lengths):
     the scheduler's (P, page, KV, dh) physical pool layout (tile size
     is the pool's page size; no relayout or densify)."""
     return _paged_decode(q, k_pages, v_pages, tables, lengths,
+                         interpret=not _on_tpu())
+
+
+@jax.jit
+def paged_verify(q, k_pages, v_pages, tables, lengths):
+    """Stacked multi-query paged decode (speculative verify): q is
+    (B, W, KV, G, dh), query i of row b attends slots
+    ``<= lengths[b] - W + i`` — one call scores a whole speculation
+    window against the block-table pool."""
+    return _paged_verify(q, k_pages, v_pages, tables, lengths,
                          interpret=not _on_tpu())

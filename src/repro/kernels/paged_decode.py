@@ -71,6 +71,95 @@ def _paged_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[...] = out[None, None].astype(o_ref.dtype)
 
 
+def _paged_verify_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, n_b: int, page: int,
+                         w: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, 0, :] * scale                        # (W, dh)
+    k = k_ref[0, :, 0, :]                                   # (page, dh)
+    s = jnp.dot(q, k.T,
+                preferred_element_type=jnp.float32)         # (W, page)
+    # query i lives at absolute slot len-W+i and attends slots <= that:
+    # the per-query causal frontier of the stacked verify window
+    slot = j * page + jax.lax.broadcasted_iota(jnp.int32, (w, page), 1)
+    qpos = (len_ref[b] - w
+            + jax.lax.broadcasted_iota(jnp.int32, (w, page), 0))
+    s = jnp.where(slot <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))   # (W, 1)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jnp.dot(p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(j == n_b - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out[None, :, None, None, :].astype(o_ref.dtype)
+
+
+def paged_flash_verify(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, lengths: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """Stacked multi-query paged decode for speculative verification.
+
+    ``q`` is (B, W, KV, G, dh): W consecutive query tokens per row, the
+    last of which sits at slot ``lengths[b] - 1`` (K/V for all W already
+    written into the pages).  Each query applies its own causal frontier
+    ``slot <= lengths[b] - W + i``, so one kernel call scores a whole
+    speculation window — same block-table gather and running softmax as
+    ``paged_flash_decode``, with W rows of scratch instead of one.
+    Returns (B, W, KV, G, dh) in ``v_pages``'s dtype.
+    """
+    b, w, kv, g, dh = q.shape
+    page = k_pages.shape[1]
+    nb = tables.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+
+    kern = functools.partial(_paged_verify_kernel, n_b=nb, page=page,
+                             w=w, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, lengths
+        grid=(b, kv, g, nb),
+        in_specs=[
+            pl.BlockSpec((1, w, 1, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (b, 0, k, gg, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (tab[b, j], 0, k,
+                                                         0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b, k, gg, j, tab, lens: (tab[b, j], 0, k,
+                                                         0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, 1, 1, dh),
+                               lambda b, k, gg, j, tab, lens: (b, 0, k, gg,
+                                                               0)),
+        scratch_shapes=[
+            pltpu.VMEM((w, 1), jnp.float32),
+            pltpu.VMEM((w, 1), jnp.float32),
+            pltpu.VMEM((w, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, w, kv, g, dh), v_pages.dtype),
+        interpret=interpret,
+    )(tables, lengths, q, k_pages, v_pages)
+
+
 def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        tables: jax.Array, lengths: jax.Array, *,
                        interpret: bool = False) -> jax.Array:

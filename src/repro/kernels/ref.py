@@ -93,6 +93,33 @@ def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       v.astype(jnp.float32)).astype(v.dtype)
 
 
+def paged_verify_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Multi-query paged oracle for speculative verification.
+
+    ``q`` stacks W consecutive query tokens per row: (B, W, KV, G, dh).
+    Query ``i`` sits at absolute slot ``lengths[b] - W + i`` (the caller
+    already wrote its K/V into the pages and counted it in ``lengths``),
+    so it attends causally to slots ``<= lengths[b] - W + i``.  W=1
+    degenerates to ``paged_decode_ref`` exactly.  Returns
+    (B, W, KV, G, dh) in ``v_pages``'s dtype.
+    """
+    b, w, kv, g, dh = q.shape
+    page = k_pages.shape[1]
+    s_tot = tables.shape[1] * page
+    k = k_pages[tables].reshape(b, s_tot, kv, dh)
+    v = v_pages[tables].reshape(b, s_tot, kv, dh)
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bwkgd,bskd->bwkgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qpos = lengths[:, None] - w + jnp.arange(w)[None, :]      # (B, W)
+    valid = jnp.arange(s_tot)[None, None, :] <= qpos[:, :, None]
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bwkgs,bskd->bwkgd", p,
+                      v.astype(jnp.float32)).astype(v.dtype)
+
+
 def decode_partial_ref(q, k, v, valid):
     """Unnormalised (o, m, l) partials matching flash_decode_partial."""
     dh = q.shape[-1]

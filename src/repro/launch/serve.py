@@ -34,6 +34,17 @@ in-flight requests under the same budget); ``--quant auto`` profiles
 every dtype and lets the planner pick shard precision jointly with
 ``(num_agents, pin_window, inflight)``.
 
+``--draft-arch`` turns on SPECULATIVE serving (needs ``--page-size``): a
+small draft model — pinned whole under the budget, like the pin window —
+proposes ``--spec-depth`` tokens per request per round, the target
+scores each request's whole window in ONE stacked verify round over the
+paged KV block tables, and the accepted prefix plus the target's bonus
+token commit together, so a round advances each request by up to
+``depth + 1`` tokens for one weight stream.  The draft must share the
+target's vocabulary; greedy outputs are token-identical to
+non-speculative serving.  ``--spec-depth 0`` (the default with a draft)
+lets the planner search depth jointly with the rest of the schedule.
+
 MoE architectures (e.g. ``--arch qwen3_moe_30b_a3b``) are partitioned
 expert-split and served through the expert-streaming subsystem
 (core/expert_stream.py): attention+router shards stream eagerly, the
@@ -86,13 +97,34 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         kv_cache: bool = True, max_inflight: int = 4,
         arrival_rate: float | None = None, seed: int = 0,
         quant: str = "fp32", page_size: int = 0,
-        prefix_cache: bool = True, shared_prefix: int = 0):
+        prefix_cache: bool = True, shared_prefix: int = 0,
+        draft_arch: str | None = None, spec_depth: int = 0):
     assert quant in QUANT_CHOICES, quant
     cfg = get(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
     ckpt = ensure_checkpoint(cfg)
     hermes = Hermes(ckpt, cfg)
+    draft = None
+    if draft_arch:
+        if not page_size:
+            raise SystemExit("error: --draft-arch needs --page-size "
+                             "(the verify window rides the paged KV "
+                             "block tables)")
+        if not kv_cache:
+            raise SystemExit("error: --draft-arch needs the KV-cache "
+                             "scheduler; drop --no-kv-cache")
+        dcfg = get(draft_arch)
+        if reduced:
+            dcfg = dcfg.reduced()       # 2 layers: a genuinely small draft
+        dcfg = dcfg.with_(name=dcfg.name + "-draft")
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"error: draft vocab ({dcfg.vocab_size}) must match the "
+                f"target's ({cfg.vocab_size}) — proposals are target "
+                f"token ids")
+        from repro.core.engine import DraftModel
+        draft = DraftModel(ensure_checkpoint(dcfg), dcfg)
     # fixed dtype = a one-entry search; "auto" lets the planner pick the
     # shard precision jointly with the schedule
     quants = ("fp32", "int8", "int4") if quant == "auto" else (quant,)
@@ -128,6 +160,16 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"({stats.streamed_bytes/2**20:.0f}MB streamed)")
         return out, stats
 
+    spec_kw = {}
+    if draft is not None:
+        depths = (spec_depth,) if spec_depth else (1, 2, 4)
+        total = prompt_len + new_tokens
+        spec_kw = dict(
+            spec_depths=tuple(d for d in depths if d and d > 0),
+            spec_draft=dict(bytes=draft.total_bytes,
+                            cache_bytes=draft.cache_bytes(
+                                1, total + max(depths)),
+                            acceptance=0.8))
     g = hermes.plan_generate([budget], prompt_len=prompt_len,
                              new_tokens=new_tokens,
                              max_inflight=max_inflight,
@@ -136,7 +178,8 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                              # with sharing disabled every page is
                              # private — don't let the plan assume hits
                              shared_prefix_len=(shared_prefix
-                                                if prefix_cache else 0))[0]
+                                                if prefix_cache else 0),
+                             **spec_kw)[0]
     if not g.feasible:
         raise SystemExit(
             f"error: no feasible serving schedule for budget="
@@ -148,12 +191,16 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
     hermes = hermes.quantized(g.dtype)
     agents = num_agents or g.num_agents
     pin = g.pin_window if pin_window is None else pin_window
+    # an explicit --spec-depth pins the verify depth; 0 defers to the
+    # planner's joint pick (which may conclude speculation doesn't pay)
+    depth = (spec_depth or g.spec_depth) if draft is not None else 0
     print(f"planner(serve): budget={budget_mb}MB -> {agents} agents, "
           f"pin={pin}, inflight={g.inflight}, dtype={g.dtype}, predicted "
           f"{g.predicted_throughput_tps:.1f} tok/s aggregate, peak "
           f"{g.predicted_peak_bytes/2**20:.0f}MB "
           f"(cache {g.cache_bytes/2**20:.1f}MB"
           + (f", page size {g.page_size}" if g.page_size else "")
+          + (f", spec depth {depth}" if depth else "")
           + (f", expert cache {g.expert_cache_bytes/2**20:.1f}MB"
              if g.expert_cache_bytes else "") + ")")
 
@@ -163,7 +210,9 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                         page_size=g.page_size or None)
     sched = BatchScheduler(eng, max_inflight=g.inflight,
                            max_total_len=prompt_len + new_tokens,
-                           prefix_cache=prefix_cache, seed=seed)
+                           prefix_cache=prefix_cache, seed=seed,
+                           draft=(draft if depth else None),
+                           spec_depth=depth)
     sched.warmup(prompt_lens=[prompt_len])
     arrivals = poisson_arrivals(requests, arrival_rate, rng)
     for i in range(requests):
@@ -188,6 +237,11 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"{stats.prefix_hit_pages} prefix-hit pages, "
               f"{stats.cow_copies} COW copies, "
               f"{stats.preemptions} preemptions")
+    if stats.spec_depth:
+        print(f"  speculative: depth {stats.spec_depth}, "
+              f"{stats.spec_rounds} verify rounds, "
+              f"{stats.accepted_tokens}/{stats.draft_tokens} proposals "
+              f"accepted ({stats.acceptance_rate:.0%})")
     if eng.expert is not None:
         print(f"  expert stream: hit rate {stats.expert_hit_rate:.0%} "
               f"({stats.expert_hits} hits / {stats.expert_misses} loads, "
@@ -237,6 +291,14 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="first N prompt tokens identical across "
                     "requests (shared-system-prompt trace)")
+    ap.add_argument("--draft-arch", default=None,
+                    type=lambda a: a.replace("-", "_").replace(".", "_"),
+                    help="speculative serving: architecture id of the "
+                    "pinned draft model (needs --page-size; must share "
+                    "the target's vocabulary)")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="draft tokens proposed per verify round; 0 = "
+                    "let the planner pick the depth jointly")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -246,7 +308,8 @@ def main():
         max_inflight=args.max_inflight, arrival_rate=args.arrival_rate,
         seed=args.seed, quant=args.quant, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
-        shared_prefix=args.shared_prefix)
+        shared_prefix=args.shared_prefix,
+        draft_arch=args.draft_arch, spec_depth=args.spec_depth)
 
 
 if __name__ == "__main__":

@@ -459,6 +459,16 @@ def _pallas_paged_decode(q, k_pool, v_pool, tables, pos):
                             (pos + 1).astype(jnp.int32))
 
 
+def _pallas_paged_verify(q, k_pool, v_pool, tables, lengths):
+    """Stacked W-query sibling of ``_pallas_paged_decode``: one kernel
+    call scores a whole speculation window, each query applying its own
+    causal frontier inside the block-table gather."""
+    from repro.kernels import ops
+
+    return ops.paged_verify(q, k_pool, v_pool, tables,
+                            lengths.astype(jnp.int32))
+
+
 def gqa_decode_paged(params, x, cfg: ModelConfig, pools, tables, pos, *,
                      attn_impl=None):
     """GQA decode against the PAGED cache: pools{k,v}: (P, page, KV, dh);
@@ -502,6 +512,67 @@ def gqa_decode_paged(params, x, cfg: ModelConfig, pools, tables, pos, *,
         out = flash_decode(qh, k_cache, v_cache,
                            jnp.broadcast_to(valid, (b, nb * page)), None)
     out = out.reshape(b, 1, kv * g * dh) @ params["w_o"]
+    return out, {"k": k_pool, "v": v_pool}
+
+
+def gqa_verify_paged(params, x, cfg: ModelConfig, pools, tables, pos, *,
+                     attn_impl=None):
+    """Stacked multi-token GQA decode against the PAGED cache — the
+    speculative-verify sibling of ``gqa_decode_paged``.
+
+    ``x``: (B, W, D) — W consecutive tokens per row (the last committed
+    token followed by the draft's proposals); ``pos``: (B,) cache slot
+    of the FIRST stacked token.  All W tokens' K/V are written into
+    their pages up front (the scheduler guarantees the write-range pages
+    are private), then each query attends causally up to its own slot —
+    token i sees slots ``<= pos + i`` — so row i's output equals what W
+    sequential ``gqa_decode_paged`` calls would produce, in ONE pass
+    over the pool.  Rejected suffixes leave garbage K/V past the
+    accepted length; it is masked by every later valid-length mask and
+    overwritten before it ever unmasks.
+
+    ``attn_impl="pallas"`` runs the stacked block-table kernel; the jnp
+    path flattens (B, W) into the batch dim and reuses the EXACT decode
+    attention (``flash_decode``) so verify logits are bit-identical to
+    the sequential jnp decode path.
+    """
+    b, w, _ = x.shape
+    kv, g, dh = cfg.n_kv_heads, cfg.q_heads_per_kv, cfg.head_dim
+    page = pools["k"].shape[1]
+    nb = tables.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = (pos.reshape(b, 1) if pos.ndim
+             else jnp.full((b, 1), pos, jnp.int32))
+    positions = pos_b + jnp.arange(w, dtype=jnp.int32)[None, :]  # (B, W)
+    q, k, v = _project_qkv(params, x, cfg)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    pids = tables[jnp.arange(b)[:, None], positions // page]     # (B, W)
+    slots = positions % page
+    k_pool = pools["k"].at[pids, slots].set(k.astype(pools["k"].dtype))
+    v_pool = pools["v"].at[pids, slots].set(v.astype(pools["v"].dtype))
+
+    qh = q.reshape(b, w, kv, g, dh)
+    if attn_impl == "pallas":
+        out = _pallas_paged_verify(qh, k_pool, v_pool, tables,
+                                   pos_b[:, 0] + w)
+    else:
+        s_tot = nb * page
+        k_cache = k_pool[tables].reshape(b, s_tot, kv, dh)
+        v_cache = v_pool[tables].reshape(b, s_tot, kv, dh)
+        valid = (jnp.arange(s_tot)[None, None, :]
+                 <= positions[:, :, None])                    # (B, W, S)
+        qf = qh.reshape(b * w, kv, g, dh)
+        kf = jnp.broadcast_to(k_cache[:, None],
+                              (b, w, s_tot, kv, dh)
+                              ).reshape(b * w, s_tot, kv, dh)
+        vf = jnp.broadcast_to(v_cache[:, None],
+                              (b, w, s_tot, kv, dh)
+                              ).reshape(b * w, s_tot, kv, dh)
+        out = flash_decode(qf, kf, vf, valid.reshape(b * w, s_tot), None)
+        out = out.reshape(b, w, kv, g, dh)
+    out = out.reshape(b, w, kv * g * dh) @ params["w_o"]
     return out, {"k": k_pool, "v": v_pool}
 
 

@@ -119,6 +119,20 @@ def layer_decode_paged(p, x, cfg: ModelConfig, pools, tables, pos, *,
     return x, pools
 
 
+def layer_verify_paged(p, x, cfg: ModelConfig, pools, tables, pos, *,
+                       attn_impl=None):
+    """Speculative-verify layer over PAGED pools: ``x`` stacks W
+    consecutive tokens per row (B, W, D), each attending causally up to
+    its own slot — one weight stream scores a whole draft window (the
+    W>1 sibling of ``layer_decode_paged``)."""
+    h = common.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    a, pools = attn.gqa_verify_paged(p["attn"], h, cfg, pools, tables,
+                                     pos, attn_impl=attn_impl)
+    x = x + a
+    x, _ = _ffn(p, x, cfg, None)
+    return x, pools
+
+
 # ===========================================================================
 # VLM helpers
 # ===========================================================================

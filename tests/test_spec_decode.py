@@ -1,0 +1,389 @@
+"""Speculative decoding on the paged KV cache (PR 6).
+
+Covers the four speculative satellites: (1) a property suite driving
+random speculate/accept/reject traces against PagePool/PrefixTree
+refcount invariants (no leaked or double-freed pages, ``mapped_pages``
+returns to baseline after a full rollback, shared prefix pages survive
+a rejected sibling); (2) token equivalence — speculative greedy output
+is BITWISE identical to dense and to non-speculative paged decode
+across page sizes and depths, including the draft==target degenerate
+100%-acceptance case and a weak 1-layer draft; (3) the stacked paged
+verify kernel against its jnp oracle (``ref.paged_verify_ref``) over a
+(page_size, seq, verify_width) sweep, with W=1 degenerating to the
+plain paged-decode pair; (4) a regression pinning that releasing a COW
+page mid-speculation while a sibling still holds it never returns the
+page to the free list early.  Planner spec-depth search and the
+scheduler's speculative serving round out the surface."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from helpers.hypothesis_compat import given, settings, st
+
+from repro.checkpoint import partition_and_save
+from repro.configs import get_config
+from repro.core import BatchScheduler, PipeloadEngine
+from repro.core.engine import DraftModel, SpecConfig, _Ledger
+from repro.core.kv_pages import (BlockTable, PagePool, PrefixTree,
+                                 pages_for)
+from repro.core.planner import plan_generate
+from repro.kernels import ops, ref
+from repro.models.api import build_model
+
+MAX_TOTAL = 16
+
+
+@pytest.fixture(scope="module")
+def gpt2s(tmp_path_factory):
+    """Small-but-real GPT-2-geometry target checkpoint on disk."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300, vocab_pad_to=4, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s"
+    api = build_model(cfg)
+    partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, path)
+    return cfg, path
+
+
+@pytest.fixture(scope="module")
+def draft1(gpt2s, tmp_path_factory):
+    """A deliberately WEAK draft: a 1-layer carve over the same vocab.
+
+    Its proposals are near-random, so verify rejects almost everything —
+    the correctness claim (token-identical output) must hold anyway."""
+    cfg, _ = gpt2s
+    dcfg = cfg.with_(name=cfg.name + "-d1", num_layers=1)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s_d1"
+    api = build_model(dcfg)
+    partition_and_save(api.init(jax.random.PRNGKey(1)), dcfg, path)
+    return dcfg, path
+
+
+# ---------------------------------------------------------------------------
+# (1) speculate/accept/reject refcount invariants on the page pool
+# ---------------------------------------------------------------------------
+def test_rollback_returns_mapped_pages_to_baseline():
+    """A fully rejected speculation window (pure appended pages, no COW
+    inside the committed range) must leave the pool EXACTLY where it
+    started — same mapped count, same ledger bytes."""
+    led = _Ledger(None)
+    pool = PagePool(4, 10, led)
+    t = BlockTable([pool.alloc(), pool.alloc()], 0)
+    pos, keep = 7, len(t.pages)                  # 7 committed tokens
+    base_pages, base_bytes = pool.mapped_pages, led.resident
+    # window [pos, pos+4] spills into pages 2 and (7+4)//4 = 2 — grow
+    while len(t.pages) * 4 < pos + 4 + 1:
+        t.pages.append(pool.alloc())
+    assert pool.mapped_pages > base_pages
+    t.rollback(pool, keep)                       # reject EVERYTHING
+    assert pool.mapped_pages == base_pages
+    assert led.resident == base_bytes
+    t.release_all(pool)
+    assert pool.mapped_pages == 0 and led.resident == 0
+
+
+def test_shared_prefix_survives_rejected_sibling():
+    """Two requests share prefix pages; one speculates into the shared
+    partial page (COW), gets fully rejected, rolls back and retires.
+    The survivor's prefix pages must still be mapped and intact."""
+    pool, tree = PagePool(4, 1), PrefixTree(4)
+    toks = list(range(10))                       # 2 full + 1 partial page
+    t_a = BlockTable(*tree.insert(toks, pool))
+    t_b = BlockTable(*tree.insert(toks, pool))
+    assert t_b.n_shared == 3
+    prefix = list(t_a.pages)
+    # B speculates: COW the shared partial page, append a window page
+    keep = len(t_b.pages)
+    assert t_b.cow(2, pool) is not None          # shared -> private copy
+    t_b.pages.append(pool.alloc())
+    # verify rejects the whole window; B rolls back and retires
+    t_b.rollback(pool, keep, tree)
+    t_b.release_all(pool, tree)
+    # A's pages all survive with exactly A's reference
+    for pid in prefix:
+        assert pool.refcount(pid) == 1
+    t_a.release_all(pool, tree)
+    assert pool.mapped_pages == 0
+
+
+def test_cow_release_mid_speculation_never_frees_early():
+    """Regression: B COWs a page A still holds, then B's speculation is
+    rejected and B retires.  The shared page must NOT land on the free
+    list while A references it — a fresh alloc may not recycle it."""
+    pool, tree = PagePool(4, 1), PrefixTree(4)
+    t_a = BlockTable(*tree.insert(list(range(4)), pool))
+    t_b = BlockTable(*tree.insert(list(range(4)), pool))
+    pid = t_a.pages[0]
+    assert pool.refcount(pid) == 2
+    old_new = t_b.cow(0, pool)                   # B's speculative write
+    assert old_new is not None and old_new[0] == pid
+    t_b.release_all(pool, tree)                  # rejected + retired
+    fresh = pool.alloc()                         # must NOT hand out pid
+    assert fresh != pid
+    assert pool.refcount(pid) == 1               # A still holds it
+    pool.release(fresh)
+    t_a.release_all(pool, tree)
+    assert pool.mapped_pages == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), page_size=st.sampled_from([1, 3, 4]),
+       depth=st.integers(1, 4), n_reqs=st.integers(2, 4))
+def test_speculate_rollback_interleaving_property(seed, page_size, depth,
+                                                 n_reqs):
+    """Random speculate/accept/reject traces over shared-prefix tables:
+    the ledger stays byte-exact with the pool at every step, no page is
+    leaked or double-freed, retirement mid-speculation of a sibling is
+    safe, and everything drains to zero at the pool's high-water mark."""
+    rng = np.random.default_rng(seed)
+    led = _Ledger(None)
+    pool = PagePool(page_size, 10, led)
+    tree = PrefixTree(page_size)
+    shared = rng.integers(0, 5, (2 * page_size,)).tolist()
+    live = {}
+    for i in range(n_reqs):
+        toks = shared + rng.integers(0, 5, (int(rng.integers(1, 6)),)).tolist()
+        live[i] = [BlockTable(*tree.insert(toks, pool)), len(toks)]
+    hw = pool.mapped_pages
+    for _ in range(30):
+        if not live:
+            break
+        assert led.resident == pool.mapped_bytes       # ledger exact
+        i = int(rng.choice(list(live)))
+        t, pos = live[i]
+        # speculative window writes slots [pos, pos + depth]: grow the
+        # table to cover it, COW any shared page in the write range
+        lo, hi = pos // page_size, (pos + depth) // page_size
+        while len(t.pages) <= hi:
+            t.pages.append(pool.alloc())
+        for idx in range(lo, hi + 1):
+            t.cow(idx, pool)                           # None if private
+        hw = max(hw, pool.mapped_pages)                # peak is mid-window
+        a = int(rng.integers(0, depth + 1))            # accepted prefix
+        pos += a + 1                                   # + bonus token
+        t.rollback(pool, pages_for(pos, page_size), tree)
+        live[i][1] = pos
+        hw = max(hw, pool.mapped_pages)
+        if pos >= 6 * page_size:                       # retire finished
+            live.pop(i)[0].release_all(pool, tree)
+        assert pool.capacity <= max(hw, pool.mapped_pages)
+    for t, _ in live.values():
+        t.release_all(pool, tree)
+    assert pool.mapped_pages == 0 and led.resident == 0
+    assert pool.capacity == hw
+
+
+# ---------------------------------------------------------------------------
+# (3) stacked paged verify kernel == jnp oracle
+# ---------------------------------------------------------------------------
+def _verify_case(rng, page, nb, w, b=2, kv=2, g=2, dh=32):
+    n_pages = 2 * nb + 3
+    kp = jnp.asarray(rng.normal(size=(n_pages, page, kv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, page, kv, dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, w, kv, g, dh)), jnp.float32)
+    tables = jnp.asarray(rng.integers(0, n_pages, (b, nb)), jnp.int32)
+    # query i sits at slot lengths - w + i, so lengths >= w
+    lengths = jnp.asarray(rng.integers(w, nb * page + 1, (b,)), jnp.int32)
+    return q, kp, vp, tables, lengths
+
+
+@pytest.mark.parametrize("page,nb,w", [(4, 3, 2), (5, 3, 4), (8, 2, 5),
+                                       (16, 2, 3)])
+def test_paged_verify_matches_oracle(page, nb, w):
+    rng = np.random.default_rng(page * 100 + nb * 10 + w)
+    q, kp, vp, tables, lengths = _verify_case(rng, page, nb, w)
+    out = ops.paged_verify(q, kp, vp, tables, lengths)
+    exp = ref.paged_verify_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_verify_w1_degenerates_to_paged_decode():
+    """A width-1 verify window IS a plain decode step: both the kernel
+    and the oracle must agree with the paged-decode pair exactly."""
+    rng = np.random.default_rng(42)
+    q, kp, vp, tables, lengths = _verify_case(rng, 4, 3, 1)
+    dec = ops.paged_decode(q[:, 0], kp, vp, tables, lengths)
+    ver = ops.paged_verify(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(ver[:, 0]), np.asarray(dec),
+                               rtol=2e-5, atol=2e-5)
+    ref_dec = ref.paged_decode_ref(q[:, 0], kp, vp, tables, lengths)
+    ref_ver = ref.paged_verify_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(ref_ver[:, 0]),
+                               np.asarray(ref_dec), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), page=st.sampled_from([2, 4, 5]),
+       nb=st.integers(1, 4), w=st.integers(1, 5))
+def test_paged_verify_property(seed, page, nb, w):
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 4))
+    kv, g = int(rng.integers(1, 3)), int(rng.integers(1, 3))
+    if nb * page < w:                # window must fit the live slots
+        nb = pages_for(w, page)
+    q, kp, vp, tables, lengths = _verify_case(rng, page, nb, w, b=b,
+                                              kv=kv, g=g, dh=16)
+    out = ops.paged_verify(q, kp, vp, tables, lengths)
+    exp = ref.paged_verify_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# (2) token equivalence: speculative greedy == dense == non-spec paged
+# ---------------------------------------------------------------------------
+def _engine_gen(path, cfg, prompt, new, *, page_size=None, spec=None):
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         page_size=page_size)
+    out, st = eng.run_generate(prompt, new, kv_cache=True, speculative=spec)
+    return np.asarray(out), st
+
+
+@pytest.mark.parametrize("page_size", [5, 8])   # odd and power-of-two
+def test_spec_greedy_identical_across_depths(gpt2s, page_size):
+    """Self-speculation (draft == target) at every depth produces
+    BITWISE the tokens of dense and non-speculative paged decode, and
+    its acceptance rate is exactly 1.0 — the degenerate ceiling."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(page_size)
+    prompt = rng.integers(0, 300, (1, 6))
+    new = 8
+    dense, _ = _engine_gen(path, cfg, prompt, new)
+    paged, _ = _engine_gen(path, cfg, prompt, new, page_size=page_size)
+    np.testing.assert_array_equal(dense, paged)
+    for depth in (1, 2, 4):
+        spec = SpecConfig(path, cfg, depth=depth)      # self-speculation
+        out, st = _engine_gen(path, cfg, prompt, new, page_size=page_size,
+                              spec=spec)
+        np.testing.assert_array_equal(out, dense)
+        assert st.acceptance_rate == 1.0
+        assert st.spec_rounds < new                    # rounds amortised
+        assert st.accepted_tokens > 0
+
+
+def test_spec_identical_with_weak_draft(gpt2s, draft1):
+    """Correctness must not depend on draft quality: a 1-layer random
+    draft still yields bitwise-dense output (verify rejects, the bonus
+    token keeps progress)."""
+    cfg, path = gpt2s
+    dcfg, dpath = draft1
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 300, (1, 6))
+    dense, _ = _engine_gen(path, cfg, prompt, 8)
+    out, st = _engine_gen(path, cfg, prompt, 8, page_size=5,
+                          spec=SpecConfig(dpath, dcfg, depth=4))
+    np.testing.assert_array_equal(out, dense)
+    assert st.spec_rounds >= 1
+    assert st.acceptance_rate <= 1.0
+
+
+def test_spec_requires_paged_cache(gpt2s):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    with pytest.raises(ValueError, match="paged KV"):
+        eng.run_generate(np.arange(6)[None], 4, kv_cache=True,
+                         speculative=SpecConfig(path, cfg, depth=2))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: speculative serving == plain serving, token for token
+# ---------------------------------------------------------------------------
+def _serve(path, cfg, prompts, news, *, draft=None, depth=0, seed=None):
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         page_size=5)
+    sched = BatchScheduler(eng, max_inflight=3, max_total_len=MAX_TOTAL,
+                           seed=seed, draft=draft, spec_depth=depth)
+    rids = [sched.submit(p, n, arrival_round=(0 if i < 3 else 1))
+            for i, (p, n) in enumerate(zip(prompts, news))]
+    outs, stats = sched.run()
+    return sched, rids, outs, stats
+
+
+def test_scheduler_spec_serving_identical(gpt2s, draft1):
+    """4 shared-prefix requests (one late arrival forcing admission
+    mid-flight): speculative serving at depths 2 and 4 — self-draft AND
+    the weak draft — retires everyone with the plain schedule's exact
+    tokens, and the pool drains."""
+    cfg, path = gpt2s
+    dcfg, dpath = draft1
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 300, (4, 8))
+    prompts[:, :4] = prompts[0, :4]             # shared prefix
+    news = [5] * 4
+    _, rb, base, _ = _serve(path, cfg, prompts, news)
+    for depth in (2, 4):
+        s, rs, outs, st = _serve(path, cfg, prompts, news,
+                                 draft=DraftModel(path, cfg), depth=depth)
+        for a, b in zip(rs, rb):
+            np.testing.assert_array_equal(outs[a], base[b])
+        assert st.spec_depth == depth
+        assert st.spec_rounds > 0
+        assert st.acceptance_rate == 1.0        # self-draft ceiling
+        assert s.pool.mapped_pages == 0
+    s, rs, outs, st = _serve(path, cfg, prompts, news,
+                             draft=DraftModel(dpath, dcfg), depth=4)
+    for a, b in zip(rs, rb):
+        np.testing.assert_array_equal(outs[a], base[b])
+    assert s.pool.mapped_pages == 0
+
+
+def test_scheduler_spec_requires_paged(gpt2s):
+    cfg, path = gpt2s
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    with pytest.raises(ValueError, match="paged KV"):
+        BatchScheduler(eng, max_inflight=2, max_total_len=MAX_TOTAL,
+                       draft=DraftModel(path, cfg), spec_depth=4)
+
+
+# ---------------------------------------------------------------------------
+# planner: the speculative depth dimension
+# ---------------------------------------------------------------------------
+def _profile(n_layers=4, layer_b=1000, other=500):
+    shards = [{"name": f"L{i}", "kind": "layer", "bytes": layer_b,
+               "t_load": 1e-3, "t_comp": 1e-4, "t_decode": 1e-5}
+              for i in range(n_layers)]
+    return {"num_layers": n_layers, "layer_bytes": layer_b,
+            "other_bytes": other, "shards": shards, "seq": 8,
+            "quant": None}
+
+
+def test_planner_spec_depth_amortises_load_bound_decode():
+    """With a free, perfect draft the verify depth amortises the weight
+    stream over depth+1 tokens per round — the planner must pick the
+    deepest window and charge the draft's bytes."""
+    prof = _profile()
+    kw = dict(new_tokens=16, cache_bytes_per_layer=320, max_pin=0,
+              page_sizes=(8,), total_len=32)
+    draft = dict(bytes=100, cache_bytes=10, acceptance=1.0, t_token=0.0)
+    plain = plan_generate(prof, [None], **kw)[0]
+    spec = plan_generate(prof, [None], spec_depths=(2, 4),
+                         spec_draft=draft, **kw)[0]
+    assert spec.spec_depth == 4
+    assert spec.draft_bytes > 0
+    assert spec.predicted_latency_s < plain.predicted_latency_s
+    assert plain.spec_depth == 0 and plain.draft_bytes == 0
+
+
+def test_planner_spec_depth_zero_when_draft_busts_budget():
+    """A draft too large for the budget must fall back to depth 0 (the
+    non-speculative entry stays feasible)."""
+    prof = _profile()
+    budget = prof["other_bytes"] + 3 * prof["layer_bytes"] + 4 * 320
+    draft = dict(bytes=10 ** 9, cache_bytes=10, acceptance=1.0)
+    e = plan_generate(prof, [budget], new_tokens=8,
+                      cache_bytes_per_layer=320, max_pin=0,
+                      page_sizes=(8,), total_len=32,
+                      spec_depths=(4,), spec_draft=draft)[0]
+    assert e.feasible and e.spec_depth == 0 and e.draft_bytes == 0
+
+
+def test_planner_spec_validation():
+    prof = _profile()
+    with pytest.raises(ValueError, match="spec_draft"):
+        plan_generate(prof, [None], new_tokens=4, cache_bytes_per_layer=100,
+                      page_sizes=(8,), total_len=16, spec_depths=(2,))
+    with pytest.raises(ValueError, match="page_sizes"):
+        plan_generate(prof, [None], new_tokens=4, cache_bytes_per_layer=100,
+                      spec_depths=(2,),
+                      spec_draft=dict(bytes=1, cache_bytes=1))
