@@ -8,7 +8,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from benchmarks.common import csv_line, emit
 
 
@@ -55,6 +55,20 @@ def run():
                    qd, kc, vc, valid)
     rows.append({"kernel": "flash_decode", "t_kernel_s": t_kern})
     lines.append(csv_line("kernel[flash_decode_1k]", t_kern * 1e6, "interp"))
+
+    # matmul again under the autotuned tiles (kernels/autotune.py; a
+    # private cache so the bench never pollutes ~/.cache/repro) — the
+    # derived column reports the winning tile so the tuned-vs-fixed
+    # delta stays visible in the headline JSON
+    sel = autotune.tune_matmul(m, k, n, cache=autotune.AutotuneCache(
+        "/tmp/repro_bench_autotune.json"), reps=3)
+    tiles = {kk2: sel[kk2] for kk2 in ("block_m", "block_n", "block_k")}
+    t_tuned = _time(lambda a, b: ops.matmul(a, b, **tiles), x, w)
+    rows.append({"kernel": "streamed_matmul_tuned", "t_kernel_s": t_tuned,
+                 "tiles": tiles})
+    lines.append(csv_line(
+        "kernel[streamed_matmul_512_tuned]", t_tuned * 1e6,
+        f"tiles={tiles['block_m']}x{tiles['block_n']}x{tiles['block_k']}"))
 
     emit(rows, "kernels")
     return lines

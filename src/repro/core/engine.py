@@ -76,6 +76,7 @@ import numpy as np
 from repro.checkpoint.partition import load_manifest, load_shard
 from repro.core.kv_pages import pages_for
 from repro.core.modules import build_module_fns
+from repro.core.prefetch import PrefetchRuntime
 from repro.models.config import ModelConfig
 
 MODES = ("baseline", "pipeswitch", "pipeload")
@@ -273,6 +274,10 @@ class PipeloadEngine:
                             if s["kind"] == "layer"]
         # persistent across pipeline rounds (pinning / non-destroying modes)
         self._resident: Dict[str, dict] = {}
+        # ONE async prefetch runtime for every byte mover: the PIPELOAD
+        # Loading Agents stream shard rounds through it and the expert
+        # engine demand-loads on the same pool (core/prefetch.py)
+        self.runtime = PrefetchRuntime(workers=self.m, name="pipeload")
         # expert-split MoE checkpoints demand-load experts post-router
         self.expert = None
         self.expert_cache_bytes = expert_cache_bytes
@@ -280,7 +285,21 @@ class PipeloadEngine:
             from repro.core.expert_stream import ExpertStreamEngine
             self.expert = ExpertStreamEngine(
                 self.dir, self.manifest, cfg, self.fns, workers=self.m,
-                cache_bytes=expert_cache_bytes)
+                cache_bytes=expert_cache_bytes, runtime=self.runtime)
+
+    def close(self):
+        """Tear down the prefetch runtime (joins worker + drainer
+        threads).  Idempotent; the engine stays usable for module-level
+        math but cannot run further pipeline rounds."""
+        if self.expert is not None:
+            self.expert.close()
+        self.runtime.close()
+
+    def __enter__(self) -> "PipeloadEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------
     def warmup(self, batch: int, seq: int, *, decode: bool = False,
@@ -358,114 +377,22 @@ class PipeloadEngine:
             self.expert.begin_round()
         if apply_fn is None:
             apply_fn = lambda k, w, h: self._apply_layer(w, h, k=k)  # noqa: E731,E501
-        ready: Dict[int, dict] = {}
-        ready_cond = threading.Condition()   # carries S_comp signals
-        destroy_q: List[Tuple[int, dict]] = []
-        destroy_cond = threading.Condition()  # carries S_dest signals
-        done = threading.Event()
-        err: List[BaseException] = []
 
-        # Budgeted runs grant ledger bytes in LAYER order: without this, a
-        # loader striped onto layer k+1 can win the race for the last slot
-        # of headroom while layer k's loader parks on S_stop — the in-order
-        # Inference Agent then never computes k, nothing is destroyed, and
-        # the pipeline deadlocks even above the budget floor.  Granting in
-        # order makes the lowest unloaded layer the next byte consumer, so
-        # the floor (other + cache + pinned + one streaming layer) really
-        # does guarantee progress.
-        stream = [k for k in range(n) if names[k] not in self._resident]
-        grant = {"pos": 0}
-        grant_cond = threading.Condition()
-
-        def acquire_in_order(k: int, nbytes: int) -> bool:
-            """Reserve ``nbytes`` for layer ``k``; False = round aborted
-            (nothing left charged)."""
-            if ledger.budget is not None:
-                with grant_cond:
-                    while (not done.is_set() and grant["pos"] < len(stream)
-                           and stream[grant["pos"]] != k):
-                        grant_cond.wait(timeout=0.1)
-                if done.is_set():
-                    return False
-            ledger.acquire(nbytes, done.is_set)  # may block: S_stop
-            if ledger.budget is not None:
-                with grant_cond:
-                    grant["pos"] += 1
-                    grant_cond.notify_all()
-            if done.is_set():
-                ledger.release(nbytes)
-                return False
-            return True
-
-        # Pinned layers (beyond-paper resident window) skip the disk load.
-        def loader(agent_idx: int):
-            try:
-                for k in range(agent_idx, n, self.m):
-                    name = names[k]
-                    if name in self._resident:
-                        with ready_cond:
-                            ready[k] = self._resident[name]
-                            ready_cond.notify_all()  # S_comp(k)
-                        continue
-                    nbytes = self.shards[name]["bytes"]
-                    if not acquire_in_order(k, nbytes):
-                        return
-                    t = time.perf_counter()
-                    w = self._load(name)
-                    events.append((t - t0, "load_start", name))
-                    events.append((time.perf_counter() - t0, "load_end",
-                                   name))
-                    with ready_cond:
-                        ready[k] = w
-                        ready_cond.notify_all()          # S_comp(k)
-            except BaseException as e:  # noqa: BLE001
-                err.append(e)
-                done.set()
-                with ready_cond:
-                    ready_cond.notify_all()
-
-        def daemon():
-            """Frees destroyed layers; wakes blocked loaders.  Keeps
-            draining ``destroy_q`` after ``done`` is raised: every queued
-            S_dest entry holds ledger bytes, and exiting with entries
-            still queued would leak them into the next round (a serving
-            session shares ONE ledger across every round, so the leak
-            would slowly eat the streaming headroom)."""
-            freed = 0
-            while freed < n:
-                with destroy_cond:
-                    while not destroy_q and not done.is_set():
-                        destroy_cond.wait(timeout=0.05)
-                    if not destroy_q:
-                        if done.is_set():
-                            return
-                        continue
-                    k, w = destroy_q.pop(0)
-                name = names[k]
-                nbytes = self.shards[name]["bytes"]
-                del w                                    # free device memory
-                ledger.release(nbytes)
-                events.append((time.perf_counter() - t0, "destroy", name))
-                freed += 1
-
-        threads = [threading.Thread(target=loader, args=(i,), daemon=True)
-                   for i in range(self.m)]
-        dt = threading.Thread(target=daemon, daemon=True) if destroy else None
-        for t in threads:
-            t.start()
-        if dt:
-            dt.start()
+        # One prefetch stream per round (core/prefetch.py): the Loading
+        # Agents are the runtime's pool workers, the Daemon Agent is its
+        # destroy drainer, and the in-order grant discipline lives there
+        # as a runtime policy.  Pinned layers (beyond-paper resident
+        # window) ride along uncharged as ``preloaded`` entries.
+        preloaded = {k: self._resident[names[k]] for k in range(n)
+                     if names[k] in self._resident}
+        stream = self.runtime.stream(
+            names, [self.shards[nm]["bytes"] for nm in names], self._load,
+            ledger=ledger, preloaded=preloaded, events=events, t0=t0)
 
         # ---- Inference Agent (this thread): in-order inference queue
-        keep: List[dict] = []   # pipeswitch: layers stay alive for the pass
-        try:
+        with stream:
             for k in range(n):
-                with ready_cond:
-                    while k not in ready and not err:
-                        ready_cond.wait(timeout=0.1)
-                    if err:
-                        raise err[0]
-                    w = ready[k]
+                w = stream.wait(k)                   # S_comp(k)
                 t = time.perf_counter()
                 x = apply_fn(k, w, x)
                 events.append((t - t0, "comp_start", names[k]))
@@ -475,22 +402,13 @@ class PipeloadEngine:
                 pinned = k < self.pin
                 if pinned and name not in self._resident:
                     self._resident[name] = w
-                del ready[k]
                 if destroy and not pinned:
-                    with destroy_cond:
-                        destroy_q.append((k, w))
-                        destroy_cond.notify_all()        # S_dest(k)
-                elif not destroy:
-                    keep.append(w)
+                    stream.destroy(k, w)             # S_dest(k)
+                else:
+                    # pin window / pipeswitch: the weights and their
+                    # ledger charge leave the stream with us
+                    stream.keep(k)
                 del w
-        finally:
-            done.set()
-            with destroy_cond:
-                destroy_cond.notify_all()
-            for t in threads:
-                t.join(timeout=5)
-            if dt:
-                dt.join(timeout=5)
         if not destroy:
             # pipeswitch: the whole model was resident for the pass (peak ==
             # full model); it is swapped out when the pass ends (PipeSwitch

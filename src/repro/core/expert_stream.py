@@ -47,7 +47,6 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -56,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.partition import load_shard
+from repro.core.prefetch import PrefetchRuntime
 from repro.models.config import ModelConfig
 
 _Key = Tuple[str, int]   # (layer shard name, expert index)
@@ -91,7 +91,17 @@ class ExpertCache:
         self.hits += 1
         return entry[0]
 
+    def peek(self, key: _Key) -> Optional[dict]:
+        """Lookup without touching the hit/miss counters or LRU order
+        (the fetch path's duplicate re-check)."""
+        entry = self._entries.get(key)
+        return None if entry is None else entry[0]
+
     def put(self, key: _Key, weights: dict, nbytes: int):
+        old = self._entries.get(key)
+        if old is not None:
+            # replacing an entry must not double-count its bytes
+            self.resident -= old[1]
         self._entries[key] = (weights, int(nbytes))
         self._entries.move_to_end(key)
         self.resident += int(nbytes)
@@ -119,7 +129,8 @@ class ExpertStreamEngine:
     """
 
     def __init__(self, ckpt_dir, manifest: dict, cfg: ModelConfig, fns,
-                 *, workers: int = 4, cache_bytes: Optional[int] = None):
+                 *, workers: int = 4, cache_bytes: Optional[int] = None,
+                 runtime: Optional[PrefetchRuntime] = None):
         self.dir = Path(ckpt_dir)
         self.cfg = cfg
         self.fns = fns
@@ -148,13 +159,31 @@ class ExpertStreamEngine:
         self._events: List = []
         self._t0 = 0.0
         self._lock = threading.Lock()
-        self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
-                                        thread_name_prefix="expert-loader")
+        # the expert-side Loading Agents ride the unified prefetch
+        # runtime: the owning PipeloadEngine shares its pool; standalone
+        # users (the profiler, unit tests) get a private one that
+        # ``close()`` tears down (the old per-engine ThreadPoolExecutor
+        # was never shut down and leaked its worker threads)
+        self._owns_runtime = runtime is None
+        self._runtime = runtime if runtime is not None else PrefetchRuntime(
+            workers=max(1, workers), name="expert-loader")
         self._zero_expert = None     # padding template (per-family shapes)
         # O(1) round bookkeeping: counters + the current round's set only
         self._rounds = 0
         self._unique_total = 0
         self._round_seen: set = set()
+
+    def close(self):
+        """Join the fetch pool's worker threads (only if this engine owns
+        the runtime — a shared pool belongs to the PipeloadEngine)."""
+        if self._owns_runtime:
+            self._runtime.close()
+
+    def __enter__(self) -> "ExpertStreamEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def working_set_bytes(self, tokens: int) -> int:
         """Bytes of the widest single fetch a round with ``tokens`` batch
@@ -296,16 +325,32 @@ class ExpertStreamEngine:
                 need = sum(rows[e]["bytes"] for e in missing)
                 self._make_room(need, locked)
         if missing:
-            futures = [(e, self._pool.submit(self._load_one, rows[e]))
+            futures = [(e, self._runtime.submit(self._load_one, rows[e]))
                        for e in missing]
             for e, fut in futures:
                 w = fut.result()
                 nbytes = rows[e]["bytes"]
-                if self._ledger is not None and not self._reserved_mode:
+                charge = (self._ledger is not None
+                          and not self._reserved_mode)
+                if charge:
+                    # unreserved acquire never parks (no budget gate), so
+                    # charging before the dup re-check below cannot wedge
                     self._ledger.acquire(nbytes, lambda: False)
                 with self._lock:
-                    self.cache.put((layer_name, e), w, nbytes)
-                out[e] = w
+                    # re-check under the lock: a concurrent fetch that
+                    # missed on the same (layer, expert) while we held no
+                    # lock may have put it already — overwriting would
+                    # strand its ledger charge (double-charge bug)
+                    cached = self.cache.peek((layer_name, e))
+                    duplicate = cached is not None
+                    if duplicate:
+                        out[e] = cached
+                    else:
+                        self.cache.put((layer_name, e), w, nbytes)
+                        out[e] = w
+                if duplicate and charge:
+                    self._ledger.release(nbytes)     # drop our copy's charge
+                del w
         if self._rounds:
             self._unique_total += len(locked - self._round_seen)
             self._round_seen |= locked

@@ -55,6 +55,21 @@ class Hermes:
         save_profile(self._profile, cache)
         return self._profile
 
+    # ---- Kernel autotune (kernels/autotune.py) -------------------------
+    def autotune(self, *, page_size: Optional[int] = None,
+                 quant: Optional[str] = None, tokens: int = 256,
+                 force: bool = False, cache_path=None) -> Dict:
+        """Per-device kernel tile / impl selection, seeded by this
+        checkpoint's Layer Profiler run and cached to disk (repeat runs
+        skip the timing sweep).  Applies the winners as the jitted
+        kernel wrappers' process-wide defaults and returns them."""
+        from repro.kernels.autotune import tune_for_model
+        host = self.quantized(quant) if quant else self
+        return tune_for_model(self.cfg, host.profile(),
+                              page_size=page_size, quant=quant,
+                              tokens=tokens, force=force,
+                              cache_path=cache_path)
+
     # ---- Quantized checkpoint variants ---------------------------------
     def quantized(self, quant: Optional[str]) -> "Hermes":
         """Hermes over the ``quant`` variant of this checkpoint.  The
@@ -157,7 +172,8 @@ class Hermes:
                   seed: Optional[int] = None,
                   draft: Optional["DraftModel"] = None,
                   spec_depth: Optional[int] = None,
-                  draft_acceptance: float = 0.8) -> "BatchScheduler":
+                  draft_acceptance: float = 0.8,
+                  autotune: bool = False) -> "BatchScheduler":
         """Continuous-batching serving facade: plan the
         (num_agents, pin_window, inflight) triple for the budget, build
         the engine, and wrap it in a ``BatchScheduler`` ready for
@@ -202,6 +218,13 @@ class Hermes:
                 f"{g.inflight}); raise the budget or shrink "
                 f"prompt/new_tokens")
         host = self.quantized(g.dtype) if quants is not None else self
+        if autotune:
+            # tune AFTER planning: the planner's winning (dtype,
+            # page_size) pair keys the autotune cache lookup, so the
+            # kernels are tuned for the configuration that will serve
+            self.autotune(page_size=(g.page_size or None),
+                          quant=(g.dtype if quants is not None
+                                 and g.dtype != FP_LABEL else None))
         eng = host.engine(mode="pipeload", budget_bytes=budget_bytes,
                           num_agents=(num_agents if num_agents is not None
                                       else g.num_agents),

@@ -74,9 +74,15 @@ def check_engine_family(cfg: ModelConfig, where: str = "the PIPELOAD "
 
 
 def resolve_attn_impl(attn_impl: Optional[str]) -> Optional[str]:
-    """"auto" -> Pallas kernel on TPU, jnp online softmax elsewhere
-    (interpret-mode Pallas is a validation tool, not a fast path)."""
+    """"auto" -> the autotuned per-device choice when one is installed
+    (kernels/autotune.py), else Pallas kernel on TPU and jnp online
+    softmax elsewhere (interpret-mode Pallas is a validation tool, not a
+    fast path)."""
     if attn_impl == "auto":
+        from repro.kernels import ops
+        tuned = ops.tuned_paged_impl()
+        if tuned is not None:
+            return "pallas" if tuned == "pallas" else None
         return "pallas" if jax.default_backend() == "tpu" else None
     return attn_impl
 

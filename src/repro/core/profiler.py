@@ -38,7 +38,19 @@ import numpy as np
 
 from repro.checkpoint.partition import load_manifest, load_shard
 from repro.core.modules import build_module_fns
+from repro.core.prefetch import PrefetchRuntime
 from repro.models.config import ModelConfig
+
+
+def _timed_device_load(runtime: PrefetchRuntime, ckpt_dir, name: str):
+    """One disk -> host -> device shard load, timed on the shared
+    prefetch runtime (the same pool the Loading Agents use, so
+    ``t_load`` measures the path serving actually takes)."""
+    def _load():
+        w = jax.tree.map(jnp.asarray, load_shard(ckpt_dir, name))
+        jax.tree.map(lambda a: a.block_until_ready(), w)
+        return w
+    return runtime.timed_load(_load)
 
 
 def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
@@ -51,11 +63,27 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
     tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
                          jnp.int32)
     expert_split = bool(manifest.get("expert_split"))
+    runtime = PrefetchRuntime(workers=2, name="profiler-load")
     es = None
     if expert_split:
         from repro.core.expert_stream import ExpertStreamEngine
-        es = ExpertStreamEngine(ckpt_dir, manifest, cfg, fns, workers=2)
+        es = ExpertStreamEngine(ckpt_dir, manifest, cfg, fns, workers=2,
+                                runtime=runtime)
+    try:
+        return _profile_model(ckpt_dir, cfg, manifest, fns, tokens, runtime,
+                              es, repeats=repeats,
+                              expert_sample=expert_sample, batch=batch,
+                              seq=seq)
+    finally:
+        if es is not None:
+            es.close()
+        runtime.close()
 
+
+def _profile_model(ckpt_dir, cfg: ModelConfig, manifest, fns, tokens,
+                   runtime: PrefetchRuntime, es, *, repeats: int,
+                   expert_sample: int, batch: int, seq: int) -> Dict:
+    expert_split = bool(manifest.get("expert_split"))
     profile = {"model": cfg.name, "batch": batch, "seq": seq,
                "quant": manifest.get("quant"),
                "ckpt_dtype": manifest.get("dtype", cfg.dtype),
@@ -74,11 +102,8 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
             if shard["expert"] < expert_sample:
                 t_loads = []
                 for _ in range(repeats):
-                    t0 = time.perf_counter()
-                    w = jax.tree.map(jnp.asarray,
-                                     load_shard(ckpt_dir, name))
-                    jax.tree.map(lambda a: a.block_until_ready(), w)
-                    t_loads.append(time.perf_counter() - t0)
+                    w, dt = _timed_device_load(runtime, ckpt_dir, name)
+                    t_loads.append(dt)
                 row["t_load"] = float(np.median(t_loads))
                 expert_t_loads.append(row["t_load"])
             expert_rows.append(row)
@@ -87,10 +112,8 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
         # ---- load time (disk -> device), cold-ish: re-read every repeat
         t_loads = []
         for _ in range(repeats):
-            t0 = time.perf_counter()
-            w = jax.tree.map(jnp.asarray, load_shard(ckpt_dir, name))
-            jax.tree.map(lambda a: a.block_until_ready(), w)
-            t_loads.append(time.perf_counter() - t0)
+            w, dt = _timed_device_load(runtime, ckpt_dir, name)
+            t_loads.append(dt)
         # ---- compute time (expert-split MoE layers run the streamed
         # router -> fetch -> combine path; the warmup call loads the
         # activated experts, so the timed repeats hit the cache and

@@ -270,6 +270,7 @@ class BatchScheduler:
             self.draft.pin(self.ledger)   # resident for the session
         else:
             self._req_headroom = 1 if self.page_size else 0
+        self._draft_pinned = self.spec_depth > 0
         self._expert_snap = (engine.expert.snapshot()
                              if engine.expert is not None else None)
         # the widest fetch this workload can lock (a max-length prompt's
@@ -278,6 +279,22 @@ class BatchScheduler:
         self._expert_floor = (
             engine.expert.working_set_bytes(max_total_len)
             if engine.expert is not None else None)
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """End the serving session: unpin the draft's ledger bytes and
+        tear down the engine's prefetch runtime (worker + drainer
+        threads).  Idempotent."""
+        if self.draft is not None and self._draft_pinned:
+            self.draft.unpin(self.ledger)
+            self._draft_pinned = False
+        self.engine.close()
+
+    def __enter__(self) -> "BatchScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,

@@ -9,7 +9,7 @@
                      ride in as scalar prefetch, so each K/V tile is
                      gathered by page id in the grid pipeline
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import autotune, ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.flash_decode import (flash_decode,  # noqa: F401
                                         flash_decode_partial)

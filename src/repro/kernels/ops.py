@@ -25,21 +25,81 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# ---- autotuned defaults (kernels/autotune.py) ----------------------------
+# ``set_tuned`` installs per-device tile selections; the wrappers resolve
+# their default blocks from here, falling back to the built-ins whenever a
+# tuned tile does not divide the call's shape (the kernels require
+# divisible tiling after clamping).
+_DEFAULT_TILES = {"block_m": 256, "block_n": 256, "block_k": 512}
+_TUNED: dict = {"matmul": None, "quant_matmul": None, "paged_impl": None}
+
+
+def set_tuned(*, matmul=None, quant_matmul=None,
+              paged_impl: Optional[str] = None):
+    """Install autotune selections as process-wide wrapper defaults
+    (pass nothing to clear)."""
+    _TUNED["matmul"] = dict(matmul) if matmul else None
+    _TUNED["quant_matmul"] = dict(quant_matmul) if quant_matmul else None
+    _TUNED["paged_impl"] = paged_impl
+
+
+def tuned_paged_impl() -> Optional[str]:
+    """The autotuned paged-decode impl choice ("pallas" / "reference"),
+    or None when untuned — ``core.modules.resolve_attn_impl`` consults
+    this for ``attn_impl="auto"``."""
+    return _TUNED["paged_impl"]
+
+
+def _divides(tile: dict, m: int, k: int, n: int) -> bool:
+    bm = min(tile["block_m"], m)
+    bn = min(tile["block_n"], n)
+    bk = min(tile["block_k"], k)
+    return m % bm == 0 and n % bn == 0 and k % bk == 0
+
+
+def _resolve_tiles(kernel: str, m: int, k: int, n: int, block_m, block_n,
+                   block_k) -> dict:
+    tuned = _TUNED[kernel]
+    base = (tuned if tuned is not None and _divides(tuned, m, k, n)
+            else _DEFAULT_TILES)
+    return {"block_m": block_m if block_m is not None else base["block_m"],
+            "block_n": block_n if block_n is not None else base["block_n"],
+            "block_k": block_k if block_k is not None else base["block_k"]}
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def matmul(x, w, *, block_m: int = 256, block_n: int = 256,
-           block_k: int = 512):
+def _matmul_jit(x, w, *, block_m: int, block_n: int, block_k: int):
     return _matmul(x, w, block_m=block_m, block_n=block_n, block_k=block_k,
                    interpret=not _on_tpu())
 
 
+def matmul(x, w, *, block_m: Optional[int] = None,
+           block_n: Optional[int] = None, block_k: Optional[int] = None):
+    tiles = _resolve_tiles("matmul", x.shape[0], x.shape[1], w.shape[1],
+                           block_m, block_n, block_k)
+    return _matmul_jit(x, w, **tiles)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "block_m", "block_n",
                                              "block_k"))
-def quant_matmul(x, w_q, scale, *, bits: int = 8, block_m: int = 256,
-                 block_n: int = 256, block_k: int = 512):
-    """Fused dequant-matmul over int8/int4 per-channel-scaled weights."""
+def _quant_matmul_jit(x, w_q, scale, *, bits: int, block_m: int,
+                      block_n: int, block_k: int):
     return _qmatmul(x, w_q, scale, bits=bits, block_m=block_m,
                     block_n=block_n, block_k=block_k,
                     interpret=not _on_tpu())
+
+
+def quant_matmul(x, w_q, scale, *, bits: int = 8,
+                 block_m: Optional[int] = None,
+                 block_n: Optional[int] = None,
+                 block_k: Optional[int] = None):
+    """Fused dequant-matmul over int8/int4 per-channel-scaled weights."""
+    k = x.shape[1]
+    tiles = _resolve_tiles("quant_matmul", x.shape[0], k, w_q.shape[1],
+                           block_m, block_n, block_k)
+    if bits == 4 and min(tiles["block_k"], k) % 2:
+        tiles["block_k"] = _DEFAULT_TILES["block_k"]
+    return _quant_matmul_jit(x, w_q, scale, bits=bits, **tiles)
 
 
 @functools.partial(jax.jit,

@@ -98,7 +98,8 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         arrival_rate: float | None = None, seed: int = 0,
         quant: str = "fp32", page_size: int = 0,
         prefix_cache: bool = True, shared_prefix: int = 0,
-        draft_arch: str | None = None, spec_depth: int = 0):
+        draft_arch: str | None = None, spec_depth: int = 0,
+        autotune: bool = False):
     assert quant in QUANT_CHOICES, quant
     cfg = get(arch)
     if reduced:
@@ -147,12 +148,13 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"dtype={plan.dtype}, "
               f"predicted latency {plan.predicted_latency_s*1e3:.0f}ms, "
               f"peak {plan.predicted_peak_bytes/2**20:.0f}MB")
-        eng = hermes.engine(mode="pipeload", budget_bytes=budget,
-                            num_agents=agents, pin_window=pin)
-        eng.warmup(requests, prompt_len)
-        t0 = time.time()
-        out, stats = eng.run_generate(prompts, new_tokens, kv_cache=False)
-        dt = time.time() - t0
+        with hermes.engine(mode="pipeload", budget_bytes=budget,
+                           num_agents=agents, pin_window=pin) as eng:
+            eng.warmup(requests, prompt_len)
+            t0 = time.time()
+            out, stats = eng.run_generate(prompts, new_tokens,
+                                          kv_cache=False)
+            dt = time.time() - t0
         print(f"served {requests} reqs x {new_tokens} tokens in {dt:.2f}s "
               f"({requests*new_tokens/dt:.1f} tok/s), "
               f"peak {stats.peak_bytes/2**20:.0f}MB, "
@@ -204,6 +206,18 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           + (f", expert cache {g.expert_cache_bytes/2**20:.1f}MB"
              if g.expert_cache_bytes else "") + ")")
 
+    if autotune:
+        # per-device kernel tiles for the planner's winning (dtype, page
+        # size), seeded from this checkpoint's profile and cached to
+        # disk — repeat serves skip the timing sweep
+        sel = hermes.autotune(page_size=g.page_size or None,
+                              quant=(g.dtype if g.dtype != "fp32"
+                                     else None))
+        mm = sel["matmul"]
+        print(f"autotune({sel['arch']}): matmul tiles "
+              f"{mm['block_m']}x{mm['block_n']}x{mm['block_k']}"
+              + (f", paged impl {sel['paged_decode']['impl']}"
+                 if "paged_decode" in sel else ""))
     eng = hermes.engine(mode="pipeload", budget_bytes=budget,
                         num_agents=agents, pin_window=pin,
                         expert_cache_bytes=g.expert_cache_bytes or None,
@@ -213,13 +227,17 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                            prefix_cache=prefix_cache, seed=seed,
                            draft=(draft if depth else None),
                            spec_depth=depth)
-    sched.warmup(prompt_lens=[prompt_len])
-    arrivals = poisson_arrivals(requests, arrival_rate, rng)
-    for i in range(requests):
-        sched.submit(prompts[i], new_tokens, arrival_round=arrivals[i])
-    t0 = time.time()
-    outs, stats = sched.run()
-    dt = time.time() - t0
+    try:
+        sched.warmup(prompt_lens=[prompt_len])
+        arrivals = poisson_arrivals(requests, arrival_rate, rng)
+        for i in range(requests):
+            sched.submit(prompts[i], new_tokens, arrival_round=arrivals[i])
+        t0 = time.time()
+        outs, stats = sched.run()
+        dt = time.time() - t0
+    except BaseException:
+        sched.close()
+        raise
     print(f"served {stats.requests} reqs x {new_tokens} tokens in "
           f"{stats.rounds} rounds / {dt:.2f}s "
           f"({stats.tokens_per_s:.1f} tok/s aggregate), peak "
@@ -252,6 +270,7 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
     for rid, req in sorted(sched.done.items()):
         print(f"  req{rid}: arrived r{req.arrival_round} admitted "
               f"r{req.admitted_round} finished r{req.finished_round}")
+    sched.close()
     return outs, stats
 
 
@@ -299,6 +318,10 @@ def main():
     ap.add_argument("--spec-depth", type=int, default=0,
                     help="draft tokens proposed per verify round; 0 = "
                     "let the planner pick the depth jointly")
+    ap.add_argument("--autotune", action="store_true",
+                    help="per-device kernel tile/impl autotune for the "
+                    "planner's winning (dtype, page size), cached to "
+                    "disk (kernels/autotune.py)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -309,7 +332,8 @@ def main():
         seed=args.seed, quant=args.quant, page_size=args.page_size,
         prefix_cache=not args.no_prefix_cache,
         shared_prefix=args.shared_prefix,
-        draft_arch=args.draft_arch, spec_depth=args.spec_depth)
+        draft_arch=args.draft_arch, spec_depth=args.spec_depth,
+        autotune=args.autotune)
 
 
 if __name__ == "__main__":

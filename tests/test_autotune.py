@@ -1,0 +1,151 @@
+"""Kernel autotune cache (kernels/autotune.py): candidate fitting, the
+disk cache round-trip, cache hits skipping the timing sweep, and how
+selections flow into the jitted wrappers (ops._resolve_tiles) and the
+auto attn-impl choice (core.modules.resolve_attn_impl)."""
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.modules import resolve_attn_impl
+from repro.kernels import autotune, ops
+from repro.kernels.autotune import AutotuneCache, _fit, _tile_candidates
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuned():
+    """Every test starts and ends with no installed selections (the
+    tuned defaults are process-wide)."""
+    ops.set_tuned()
+    yield
+    ops.set_tuned()
+
+
+def test_fit_finds_largest_divisor():
+    assert _fit(256, 256) == 256
+    assert _fit(256, 64) == 64          # clamped to the dim
+    assert _fit(128, 192) == 96         # largest divisor <= 128
+    assert _fit(512, 300) == 300        # dim itself when nothing smaller
+
+
+def test_tile_candidates_divide_and_int4_even():
+    for bm, bn, bk in _tile_candidates(256, 768, 3072, None):
+        assert 256 % bm == 0 and 3072 % bn == 0 and 768 % bk == 0
+    for _, _, bk in _tile_candidates(8, 70, 64, 4):
+        assert bk % 2 == 0              # int4 packs two k-rows per byte
+
+
+def test_cache_roundtrip_and_versioning(tmp_path):
+    path = tmp_path / "at.json"
+    c = AutotuneCache(path)
+    entry = {"block_m": 64, "block_n": 64, "block_k": 128, "t_us": 10.0}
+    c.put("matmul", entry, arch="cpu", dtype="float32")
+    c.save()
+    assert AutotuneCache.key("matmul", arch="cpu", dtype="float32") == \
+        "matmul|cpu|float32|page=-"
+    assert AutotuneCache.key("paged_decode", arch="cpu", dtype="float32",
+                             page_size=4) == \
+        "paged_decode|cpu|float32|page=4"
+    again = AutotuneCache(path)
+    assert again.get("matmul", arch="cpu", dtype="float32") == entry
+    assert again.get("matmul", arch="tpu", dtype="float32") is None
+    # a version bump discards stale entries instead of misusing them
+    blob = json.loads(path.read_text())
+    blob["version"] = autotune.VERSION + 1
+    path.write_text(json.dumps(blob))
+    assert AutotuneCache(path).entries == {}
+
+
+def test_tune_matmul_caches_winner(tmp_path, monkeypatch):
+    cache = AutotuneCache(tmp_path / "at.json")
+    calls = {"n": 0}
+    real = autotune._median_time
+
+    def counting(fn, reps=3):
+        calls["n"] += 1
+        return real(fn, reps=1)
+    monkeypatch.setattr(autotune, "_median_time", counting)
+    entry = autotune.tune_matmul(8, 64, 128, cache=cache, reps=1)
+    assert 8 % min(entry["block_m"], 8) == 0
+    assert 64 % min(entry["block_k"], 64) == 0
+    assert 128 % min(entry["block_n"], 128) == 0
+    assert entry["shape"] == [8, 64, 128] and entry["t_us"] > 0
+    assert calls["n"] > 0
+    assert (tmp_path / "at.json").exists()
+    # second call: served from the cache, no timing sweep
+    calls["n"] = 0
+    hit = autotune.tune_matmul(8, 64, 128, cache=cache, reps=1)
+    assert hit == entry and calls["n"] == 0
+    # force re-runs the sweep
+    autotune.tune_matmul(8, 64, 128, cache=cache, reps=1, force=True)
+    assert calls["n"] > 0
+
+
+def test_tune_quant_matmul_int4(tmp_path):
+    cache = AutotuneCache(tmp_path / "at.json")
+    entry = autotune.tune_matmul(8, 64, 64, bits=4, dtype="int4",
+                                 cache=cache, reps=1)
+    assert min(entry["block_k"], 64) % 2 == 0
+    assert cache.get("quant_matmul4", arch=autotune.device_arch(),
+                     dtype="int4") == entry
+
+
+def test_tune_paged_decode_picks_an_impl(tmp_path):
+    cache = AutotuneCache(tmp_path / "at.json")
+    entry = autotune.tune_paged_decode(4, kv_heads=2, groups=2,
+                                       head_dim=8, cache=cache, reps=1)
+    assert entry["impl"] in ("pallas", "reference")
+    assert entry["t_us"] <= entry["t_us_other"]
+    hit = cache.get("paged_decode", arch=autotune.device_arch(),
+                    dtype="float32", page_size=4)
+    assert hit == entry
+
+
+def test_resolve_tiles_precedence():
+    m, k, n = 256, 512, 256
+    # untuned: built-in defaults
+    t = ops._resolve_tiles("matmul", m, k, n, None, None, None)
+    assert t == ops._DEFAULT_TILES
+    # tuned and divisible: tuned wins
+    ops.set_tuned(matmul={"block_m": 64, "block_n": 128, "block_k": 256})
+    t = ops._resolve_tiles("matmul", m, k, n, None, None, None)
+    assert t == {"block_m": 64, "block_n": 128, "block_k": 256}
+    # explicit args beat the tuned entry
+    t = ops._resolve_tiles("matmul", m, k, n, 32, None, None)
+    assert t["block_m"] == 32 and t["block_n"] == 128
+    # tuned tile that does not divide the call's shape: fall back whole
+    t = ops._resolve_tiles("matmul", 100, 70, 30, None, None, None)
+    assert t == ops._DEFAULT_TILES
+
+
+def test_apply_tuning_installs_paged_impl():
+    backend_default = "pallas" if jax.default_backend() == "tpu" else None
+    assert resolve_attn_impl("auto") == backend_default
+    autotune.apply_tuning({"matmul": {"block_m": 64, "block_n": 64,
+                                      "block_k": 128},
+                           "paged_decode": {"impl": "pallas"}})
+    assert ops.tuned_paged_impl() == "pallas"
+    assert resolve_attn_impl("auto") == "pallas"
+    autotune.apply_tuning({"paged_decode": {"impl": "reference"}})
+    assert resolve_attn_impl("auto") is None       # jnp gather path
+    assert resolve_attn_impl("pallas") == "pallas"  # explicit untouched
+
+
+def test_tune_for_model_seeds_and_applies(tmp_path):
+    cfg = get_config("gpt2_base").with_(d_model=64, d_ff=128, n_heads=2,
+                                        n_kv_heads=2, head_dim=8)
+    profile = {"ckpt_dtype": "float32", "layer_t_comp": 0.01,
+               "layer_t_load": 0.02}
+    out = autotune.tune_for_model(cfg, profile, page_size=4,
+                                  cache_path=tmp_path / "at.json",
+                                  tokens=8, reps=1)
+    assert out["matmul"]["seed"] == {"layer_t_comp": 0.01,
+                                     "layer_t_load": 0.02}
+    assert out["paged_decode"]["impl"] in ("pallas", "reference")
+    assert ops._TUNED["matmul"] is not None        # applied
+    # seed metadata survives the disk round-trip
+    blob = json.loads((tmp_path / "at.json").read_text())
+    key = AutotuneCache.key("matmul", arch=autotune.device_arch(),
+                            dtype="float32")
+    assert blob["entries"][key]["seed"]["layer_t_load"] == 0.02

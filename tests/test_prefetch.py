@@ -1,0 +1,396 @@
+"""Fault-injection suite for the unified prefetch runtime
+(core/prefetch.py): inject load failures / cancellations at every
+lifecycle stage (acquire -> load -> publish -> consume -> destroy) and
+assert the ledger drains byte-exact to its pre-round level — the
+runtime's load-bearing invariant.  Extends the hypothesis-compat
+exact-drain properties from ``tests/test_scheduler_stress.py`` down to
+the runtime layer, plus regression tests for the engine loader leak and
+the expert-fetch double-charge.
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+from helpers.hypothesis_compat import given, settings, st
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import PipeloadEngine, PrefetchFault, PrefetchRuntime
+from repro.core.engine import _Ledger
+from repro.core.expert_stream import ExpertCache, ExpertStreamEngine
+from repro.core.modules import build_module_fns
+from repro.models.api import build_model
+from repro.models.config import MOE, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level lifecycle properties (no model needed: a fake disk)
+# ---------------------------------------------------------------------------
+def _fake_shards(n, nbytes=100):
+    keys = [f"shard{i}" for i in range(n)]
+    sizes = [nbytes + i for i in range(n)]
+    return keys, sizes
+
+
+def _run_round(runtime, keys, sizes, ledger, *, fail_load=None,
+               fail_apply=None, cancel_at=None, retries=0,
+               preloaded=None):
+    """Drive one consumer round; returns the exception seen (or None)."""
+    def load(key):
+        if fail_load is not None and key == keys[fail_load]:
+            raise IOError(f"boom:{key}")
+        time.sleep(0.001)
+        return {"w": key}
+    stream = runtime.stream(keys, sizes, load, ledger=ledger,
+                            preloaded=preloaded or {}, retries=retries)
+    try:
+        with stream:
+            for k in range(len(keys)):
+                if cancel_at is not None and k == cancel_at:
+                    return None                    # close() via __exit__
+                w = stream.wait(k)
+                if fail_apply is not None and k == fail_apply:
+                    raise RuntimeError(f"apply:{k}")
+                if k not in (preloaded or {}):
+                    stream.destroy(k, w)
+    except (IOError, RuntimeError) as e:
+        return e
+    return None
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 8), workers=st.integers(1, 4),
+       budget_slots=st.integers(1, 3), fail=st.integers(0, 7))
+def test_load_fault_drains_exact(n, workers, budget_slots, fail):
+    """A load failure at ANY position leaves the ledger byte-exact at
+    its pre-round level (the engine-loader leak, as a property)."""
+    keys, sizes = _fake_shards(n)
+    ledger = _Ledger(budget_slots * (max(sizes) + 1))
+    base = ledger.resident
+    with PrefetchRuntime(workers=workers, name="t") as rt:
+        err = _run_round(rt, keys, sizes, ledger, fail_load=fail % n)
+        assert isinstance(err, IOError)
+        assert ledger.resident == base
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 8), workers=st.integers(1, 4),
+       fail=st.integers(0, 7), budgeted=st.booleans())
+def test_consumer_fault_drains_exact(n, workers, fail, budgeted):
+    """An Inference-Agent exception mid-round (weights consumed and
+    published-but-unconsumed both outstanding) still drains exactly."""
+    keys, sizes = _fake_shards(n)
+    ledger = _Ledger(2 * (max(sizes) + 1) if budgeted else None)
+    base = ledger.resident
+    with PrefetchRuntime(workers=workers, name="t") as rt:
+        err = _run_round(rt, keys, sizes, ledger, fail_apply=fail % n)
+        assert isinstance(err, RuntimeError)
+        assert ledger.resident == base
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 8), cancel=st.integers(0, 7))
+def test_cancellation_drains_exact(n, cancel):
+    """Closing a stream mid-round (nothing failed — the round was simply
+    abandoned) releases every in-flight and published charge."""
+    keys, sizes = _fake_shards(n)
+    ledger = _Ledger(None)
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        assert _run_round(rt, keys, sizes, ledger,
+                          cancel_at=cancel % n) is None
+        assert ledger.resident == 0
+
+
+def test_happy_path_in_order_and_exact():
+    keys, sizes = _fake_shards(6)
+    ledger = _Ledger(2 * (max(sizes) + 1))
+    with PrefetchRuntime(workers=3, name="t") as rt:
+        assert _run_round(rt, keys, sizes, ledger) is None
+    assert ledger.resident == 0
+    assert ledger.peak <= ledger.budget
+
+
+def test_preloaded_entries_never_charged():
+    keys, sizes = _fake_shards(4)
+    ledger = _Ledger(None)
+    pre = {0: {"w": "resident0"}, 2: {"w": "resident2"}}
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        assert _run_round(rt, keys, sizes, ledger, preloaded=pre) is None
+    assert ledger.resident == 0
+    assert ledger.peak <= sizes[1] + sizes[3]
+
+
+def test_keep_transfers_ownership():
+    """keep() hands the charge to the caller: close() must NOT release
+    it (pin window / pipeswitch semantics)."""
+    keys, sizes = _fake_shards(3)
+    ledger = _Ledger(None)
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        stream = rt.stream(keys, sizes, lambda k: {"w": k}, ledger=ledger)
+        with stream:
+            kept = []
+            for k in range(3):
+                kept.append(stream.wait(k))
+                stream.keep(k)
+        assert ledger.resident == sum(sizes)     # still ours
+        for nb in sizes:
+            ledger.release(nb)
+    assert ledger.resident == 0
+
+
+def test_transient_fault_retries_to_success():
+    """retries > 0 absorbs transient faults: the round completes and the
+    ledger drains (CI's flaky-loader serve smoke, as a unit test)."""
+    keys, sizes = _fake_shards(5)
+    ledger = _Ledger(None)
+    attempts = {}
+    lock = threading.Lock()
+
+    def flaky(key):
+        with lock:
+            attempts[key] = attempts.get(key, 0) + 1
+            if attempts[key] < 3:
+                raise PrefetchFault(f"transient:{key}")
+        return {"w": key}
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        stream = rt.stream(keys, sizes, flaky, ledger=ledger, retries=2)
+        with stream:
+            for k in range(5):
+                stream.destroy(k, stream.wait(k))
+    assert ledger.resident == 0
+    assert all(n == 3 for n in attempts.values())
+
+
+def test_retries_exhausted_still_drains():
+    keys, sizes = _fake_shards(3)
+    ledger = _Ledger(None)
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        err = _run_round(rt, keys, sizes, ledger, fail_load=1, retries=2)
+        assert isinstance(err, IOError)
+    assert ledger.resident == 0
+
+
+def test_env_fault_injection(monkeypatch):
+    monkeypatch.setenv("REPRO_PREFETCH_FAULT_RATE", "1.0")
+    ledger = _Ledger(None)
+    keys, sizes = _fake_shards(3)
+    with PrefetchRuntime(workers=1, name="t") as rt:
+        assert rt.fault_rate == 1.0
+        stream = rt.stream(keys, sizes, lambda k: {"w": k}, ledger=ledger)
+        with stream:
+            with pytest.raises(PrefetchFault):
+                stream.wait(0)
+    assert ledger.resident == 0
+
+
+def test_timed_load_and_submit():
+    with PrefetchRuntime(workers=1, name="t") as rt:
+        out, dt = rt.timed_load(lambda: sum(range(100)))
+        assert out == sum(range(100)) and dt >= 0
+        assert rt.submit(lambda: 7).result() == 7
+    with pytest.raises(RuntimeError):
+        rt.submit(lambda: 1)                     # closed runtime refuses
+
+
+def test_demand_submit_never_queues_behind_parked_stream():
+    """REGRESSION: demand loads issued by the consumer mid-layer (the
+    expert-fetch path) must not share the stream workers' pool — a
+    budgeted round parks every stream worker on S_stop until the
+    consumer destroys a layer, so a demand load queued behind them
+    deadlocks the round."""
+    keys, sizes = _fake_shards(6)
+    ledger = _Ledger(2 * (max(sizes) + 1))
+    with PrefetchRuntime(workers=2, name="t") as rt:
+        stream = rt.stream(keys, sizes, lambda k: {"w": k}, ledger=ledger)
+        with stream:
+            for k in range(6):
+                w = stream.wait(k)
+                # both stream workers may be parked right now; the
+                # demand pool must still serve the consumer
+                assert rt.submit(lambda v=k: v).result(timeout=10) == k
+                stream.destroy(k, w)
+    assert ledger.resident == 0
+
+
+def test_close_idempotent_and_joins_threads():
+    rt = PrefetchRuntime(workers=2, name="joinme")
+    rt.submit(lambda: 1).result()
+    rt.close()
+    rt.close()
+    assert not any(t.name.startswith("joinme-")
+                   for t in threading.enumerate())
+
+
+# ---------------------------------------------------------------------------
+# Engine regression: the loader leak (ISSUE satellite #1)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny(tmp_path_factory):
+    cfg = get_config("gpt2_base").with_(
+        num_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300, vocab_pad_to=4, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "tiny"
+    api = build_model(cfg)
+    partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, path)
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    return cfg, path, layer_b, other
+
+
+def _pipeline_fixture(tiny, budget_extra_layers=2):
+    cfg, path, layer_b, other = tiny
+    budget = other + budget_extra_layers * layer_b
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget)
+    ledger = _Ledger(budget)
+    events = []
+    eng._ensure_aux(ledger, events, time.perf_counter())
+    tokens = np.zeros((1, 8), np.int32)
+    x = eng.fns["embed"](eng._resident["embed"], jax.numpy.asarray(tokens))
+    return eng, ledger, events, x
+
+
+def test_faulting_load_releases_ledger(tiny):
+    """REGRESSION: a loader whose ``_load`` raises after its in-order
+    acquire must release the charged bytes — the pre-runtime engine set
+    ``done`` but leaked them, permanently eating session headroom."""
+    eng, ledger, events, x = _pipeline_fixture(tiny)
+    with eng:
+        base = ledger.resident
+        victim = eng.layer_names[1]
+        orig = eng._load
+
+        def flaky(name):
+            if name == victim:
+                raise IOError("disk hiccup")
+            return orig(name)
+        eng._load = flaky
+        with pytest.raises(IOError):
+            eng._run_pipeline(x, ledger, events, time.perf_counter(),
+                              destroy=True)
+        assert ledger.resident == base
+        # and the engine recovers: the next round serves normally
+        eng._load = orig
+        eng._run_pipeline(x, ledger, events, time.perf_counter(),
+                          destroy=True)
+        assert ledger.resident == base
+
+
+def test_consumer_fault_mid_round_releases_ledger(tiny):
+    """Published-but-unconsumed weights (loaders ran ahead) are swept
+    when the Inference Agent dies mid-round."""
+    eng, ledger, events, x = _pipeline_fixture(tiny, budget_extra_layers=3)
+    with eng:
+        base = ledger.resident
+
+        def exploding(k, w, h):
+            if k == 1:
+                raise RuntimeError("inference fault")
+            return eng._apply_layer(w, h, k=k)
+        with pytest.raises(RuntimeError):
+            eng._run_pipeline(x, ledger, events, time.perf_counter(),
+                              destroy=True, apply_fn=exploding)
+        assert ledger.resident == base
+
+
+def test_engine_close_joins_runtime(tiny):
+    cfg, path, _, _ = tiny
+    # scope the leak check to THIS engine: earlier suites may leave
+    # unclosed (old-API) engines whose daemon workers share the prefix
+    before = {t.ident for t in threading.enumerate()}
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2)
+    _, _ = eng.run_single(np.zeros((1, 8), np.int32))
+    eng.close()
+    assert eng.runtime.closed
+    leaked = [t for t in threading.enumerate()
+              if t.ident not in before and t.name.startswith("pipeload-")]
+    assert not leaked
+
+
+# ---------------------------------------------------------------------------
+# Expert-stream regressions (ISSUE satellites #2 and #3)
+# ---------------------------------------------------------------------------
+MOE_CFG = ModelConfig("prefetch-moe-test", MOE, 2, 64, 4, 2, 0, 256,
+                      head_dim=16, n_experts=8, top_k=2, expert_d_ff=32,
+                      dtype="float32", vocab_pad_to=64, remat=False)
+
+
+@pytest.fixture(scope="module")
+def moe_ckpt(tmp_path_factory):
+    path = tmp_path_factory.mktemp("moe") / "split"
+    params = build_model(MOE_CFG).init(jax.random.PRNGKey(0))
+    partition_and_save(params, MOE_CFG, path)
+    return path
+
+
+def _expert_engine(path, runtime=None):
+    manifest = load_manifest(path)
+    fns = build_module_fns(MOE_CFG)
+    return ExpertStreamEngine(path, manifest, MOE_CFG, fns, workers=4,
+                              runtime=runtime)
+
+
+def test_concurrent_fetch_no_double_charge(moe_ckpt):
+    """REGRESSION: two threads missing on the same (layer, expert)
+    concurrently must charge its bytes ONCE — the lock was dropped
+    between ``_make_room`` and ``cache.put``, so the loser's put
+    overwrote the winner's entry and stranded its ledger charge."""
+    es = _expert_engine(moe_ckpt)
+    layer = next(iter(es.rows))
+    ledger = _Ledger(None)                # unreserved: per-expert charges
+    es.reserve(ledger, es.total_bytes, [], 0.0)
+    assert not es._reserved_mode
+    ids = list(es.rows[layer])[:4]
+    errs = []
+
+    def storm():
+        try:
+            for _ in range(5):
+                es.fetch(layer, ids)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+    threads = [threading.Thread(target=storm) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    # every resident byte charged exactly once
+    assert ledger.resident == es.cache.resident
+    es.clear()
+    assert ledger.resident == 0
+    es.close()
+
+
+def test_expert_cache_put_replace_no_double_count():
+    c = ExpertCache()
+    c.put(("l", 0), {"w": 1}, 100)
+    c.put(("l", 0), {"w": 2}, 100)       # replace, not accumulate
+    assert c.resident == 100
+    assert c.evict_lru() == (("l", 0), 100)
+    assert c.resident == 0
+
+
+def test_expert_engine_close_joins_pool(moe_ckpt):
+    before = {t.ident for t in threading.enumerate()}
+    es = _expert_engine(moe_ckpt)
+    layer = next(iter(es.rows))
+    es.fetch(layer, list(es.rows[layer])[:2])
+    es.close()
+    leaked = [t for t in threading.enumerate()
+              if t.ident not in before
+              and t.name.startswith("expert-loader")]
+    assert not leaked
+
+
+def test_expert_engine_shared_runtime_not_closed(moe_ckpt):
+    with PrefetchRuntime(workers=2, name="shared") as rt:
+        es = _expert_engine(moe_ckpt, runtime=rt)
+        layer = next(iter(es.rows))
+        es.fetch(layer, list(es.rows[layer])[:2])
+        es.close()                        # must NOT close the shared pool
+        assert not rt.closed
+        assert rt.submit(lambda: 3).result() == 3
