@@ -27,6 +27,7 @@ BENCHES = {
     "decode": "benchmarks.bench_decode",
     "batch_decode": "benchmarks.bench_batch_decode",
     "prefix": "benchmarks.bench_prefix",
+    "serve_slo": "benchmarks.bench_serve_slo",
     "spec": "benchmarks.bench_spec_decode",
     "quant": "benchmarks.bench_quant",
     "moe": "benchmarks.bench_moe_stream",

@@ -8,12 +8,12 @@ from repro.core.expert_stream import (ExpertCache,  # noqa: F401
                                       ExpertStreamEngine)
 from repro.core.hermes import Hermes  # noqa: F401
 from repro.core.kv_pages import (BlockTable, PagePool,  # noqa: F401
-                                 PrefixTree, pages_for)
+                                 PrefixNamespaces, PrefixTree, pages_for)
 from repro.core.planner import (GenPlanEntry, PlanEntry,  # noqa: F401
                                 analytic_latency, expected_unique_experts,
                                 plan, plan_generate, simulate)
 from repro.core.prefetch import (PrefetchFault,  # noqa: F401
                                  PrefetchRuntime, PrefetchStream)
 from repro.core.profiler import profile_model  # noqa: F401
-from repro.core.scheduler import (BatchScheduler, Request,  # noqa: F401
-                                  ServeStats)
+from repro.core.scheduler import (SLO, BatchScheduler,  # noqa: F401
+                                  Request, ServeStats)

@@ -952,7 +952,8 @@ class PipeloadEngine:
                         decode_pos=None, prefill_xs=(),
                         prefill_total: int = 0,
                         paged_pools: Optional[Dict] = None,
-                        decode_tables=None):
+                        decode_tables=None,
+                        chunk_x=None, chunk_tables=None, chunk_pos=None):
         """ONE pipeline round shared by every in-flight request.
 
         The §III machinery (loading agents, S_comp/S_dest/S_stop, in-order
@@ -981,9 +982,19 @@ class PipeloadEngine:
         caches slot.  Prefill jobs are unchanged either way: the caller
         scatters their captured caches into pages at the boundary.
 
+        Chunked prefill (the serving tier's long-prompt path) passes
+        ``chunk_x`` (Bc, C, D) stacked C-token windows with their own
+        ``chunk_tables`` (Bc, NB) / ``chunk_pos`` (Bc,): each streamed
+        layer additionally applies ``layer_verify_paged`` to the chunk
+        batch, writing the chunks' K/V straight into their requests'
+        pages in-kernel — a long prompt joins decode rounds one chunk at
+        a time instead of stalling them behind a monolithic prefill.
+
         Returns ``(decode_x', decode_caches', prefill_outs,
-        prefill_caches)`` — the advanced decode states and, per prefill
-        job, its final hidden states and captured per-layer caches.
+        prefill_caches, chunk_x')`` — the advanced decode states, per
+        prefill job its final hidden states and captured per-layer
+        caches, and the chunk batch's final hidden states (None when no
+        chunks ran).
         """
         if self.mode == "baseline":
             raise ValueError(
@@ -1004,9 +1015,13 @@ class PipeloadEngine:
                 "stacked multi-token decode (speculative verify) needs "
                 "paged pools; dense decode_caches take one token per "
                 "round")
+        if chunk_x is not None and paged_pools is None:
+            raise ValueError(
+                "chunked prefill needs paged pools (chunks write K/V "
+                "through the block tables)")
 
         def apply_fn(k, w, state):
-            dx, pxs = state
+            dx, cx, pxs = state
             if dx is not None and paged_pools is not None:
                 # W>1 stacked states = a speculative verify round: each
                 # request's window [pos, pos+W) scores in one pass
@@ -1020,26 +1035,36 @@ class PipeloadEngine:
                 dx, decode_caches[names[k]] = self._layer_decode(
                     k, w, dx, decode_caches[names[k]], decode_pos)
                 dx.block_until_ready()
+            if cx is not None:
+                # chunk windows ride the same verify module at width C,
+                # against their OWN tables/positions (disjoint writes:
+                # chunk slots are prompt positions in the chunkers'
+                # pages; any shared page gets bitwise-identical bytes)
+                cx, paged_pools[names[k]] = self.fns["layer_verify_paged"](
+                    w, cx, paged_pools[names[k]], chunk_tables, chunk_pos)
+                cx.block_until_ready()
             nxt = []
             for i, px in enumerate(pxs):
                 px, cache = self._layer_cache(k, w, px, prefill_total)
                 px.block_until_ready()
                 prefill_caches[i][names[k]] = cache
                 nxt.append(px)
-            return dx, nxt
+            return dx, cx, nxt
 
         self._ensure_aux(ledger, events, t0)
         widest = [px.shape[0] * px.shape[1] for px in prefill_xs]
         if decode_x is not None:
             widest.append(decode_x.shape[0])
+        if chunk_x is not None:
+            widest.append(chunk_x.shape[0] * chunk_x.shape[1])
         self._bind_expert(ledger, events, t0,
                           round_tokens=max(widest, default=1))
-        state = (decode_x, list(prefill_xs))
-        dx, pxs = self._run_pipeline(state, ledger, events, t0,
-                                     destroy=self.mode == "pipeload",
-                                     apply_fn=apply_fn)
+        state = (decode_x, chunk_x, list(prefill_xs))
+        dx, cx, pxs = self._run_pipeline(state, ledger, events, t0,
+                                         destroy=self.mode == "pipeload",
+                                         apply_fn=apply_fn)
         caches_out = paged_pools if paged_pools is not None else decode_caches
-        return dx, caches_out, pxs, prefill_caches
+        return dx, caches_out, pxs, prefill_caches, cx
 
     def _kv_floor(self, cache_total: int, *,
                   expert_floor: Optional[int] = None,

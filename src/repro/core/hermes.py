@@ -117,7 +117,10 @@ class Hermes:
                       page_sizes: Sequence[int] = (),
                       shared_prefix_len: int = 0,
                       spec_depths: Sequence[int] = (),
-                      spec_draft: Optional[Dict] = None
+                      spec_draft: Optional[Dict] = None,
+                      slo_ttft_s: Optional[float] = None,
+                      slo_tpot_s: Optional[float] = None,
+                      chunk_prefill: int = 0
                       ) -> List[GenPlanEntry]:
         """Generation-aware schedule: joint (num_agents, pin_window) with
         KV-cache bytes charged against the budget.  ``max_inflight > 1``
@@ -130,7 +133,10 @@ class Hermes:
         tokens the workload's requests share, whose full pages are
         charged once across the batch; ``spec_depths`` + ``spec_draft``
         widen it over SPECULATIVE verify depths (a pinned draft's bytes,
-        cache row and acceptance rate — see ``planner.plan_generate``)."""
+        cache row and acceptance rate — see ``planner.plan_generate``);
+        ``slo_ttft_s``/``slo_tpot_s`` gate the capacity-first search on
+        predicted TTFT/TPOT (``chunk_prefill`` models chunk-joined
+        prefill rounds — see the planner's SLO dimension)."""
         cb = self.cfg.cache_bytes(batch, prompt_len + new_tokens)
         prof = (self.profile() if quants is None
                 else self._quant_profiles(quants, batch=1, seq=prompt_len))
@@ -141,7 +147,9 @@ class Hermes:
                              total_len=prompt_len + new_tokens,
                              shared_prefix_len=shared_prefix_len,
                              spec_depths=tuple(spec_depths),
-                             spec_draft=spec_draft)
+                             spec_draft=spec_draft,
+                             slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s,
+                             chunk_prefill=chunk_prefill)
 
     # ---- Execution Engine ----------------------------------------------
     def engine(self, *, mode: str = "pipeload",
@@ -173,7 +181,12 @@ class Hermes:
                   draft: Optional["DraftModel"] = None,
                   spec_depth: Optional[int] = None,
                   draft_acceptance: float = 0.8,
-                  autotune: bool = False) -> "BatchScheduler":
+                  autotune: bool = False,
+                  chunk_prefill: int = 0,
+                  slo: Optional["SLO"] = None,
+                  slo_ttft_s: Optional[float] = None,
+                  slo_tpot_s: Optional[float] = None
+                  ) -> "BatchScheduler":
         """Continuous-batching serving facade: plan the
         (num_agents, pin_window, inflight) triple for the budget, build
         the engine, and wrap it in a ``BatchScheduler`` ready for
@@ -188,8 +201,24 @@ class Hermes:
         fixes the verify depth (None = search {1, 2, 4} jointly at the
         modelled ``draft_acceptance``), and the winning depth — 0 when
         speculation does not pay at this budget — drives the
-        scheduler's draft-and-verify rounds."""
-        from repro.core.scheduler import BatchScheduler
+        scheduler's draft-and-verify rounds.
+
+        The SERVING-TIER knobs: ``chunk_prefill`` (tokens per prefill
+        chunk; needs ``page_sizes``, incompatible with ``draft``) joins
+        long prompts into decode rounds; ``slo`` (a rounds-based
+        ``scheduler.SLO``) arms admission-time shedding; and
+        ``slo_ttft_s``/``slo_tpot_s`` gate the planner's capacity-first
+        search — when only the seconds targets are given, the winning
+        schedule's predicted round latency converts them into the
+        rounds-based ``SLO`` handed to the scheduler."""
+        from repro.core.scheduler import SLO, BatchScheduler
+        if chunk_prefill and draft is not None:
+            raise ValueError("chunk_prefill is incompatible with a draft "
+                             "model (speculative rounds own the verify "
+                             "window)")
+        if chunk_prefill and not page_sizes:
+            raise ValueError("chunk_prefill requires page_sizes (chunk "
+                             "rounds write through the paged KV kernel)")
         spec_kw = {}
         if draft is not None:
             depths = ((spec_depth,) if spec_depth else (1, 2, 4))
@@ -209,6 +238,9 @@ class Hermes:
                                shared_prefix_len=(shared_prefix_len
                                                   if prefix_cache
                                                   else 0),
+                               slo_ttft_s=slo_ttft_s,
+                               slo_tpot_s=slo_tpot_s,
+                               chunk_prefill=chunk_prefill,
                                **spec_kw)[0]
         if not g.feasible:
             raise ValueError(
@@ -232,12 +264,25 @@ class Hermes:
                                       else g.pin_window),
                           expert_cache_bytes=(g.expert_cache_bytes or None),
                           page_size=(g.page_size or None))
+        if slo is None and (slo_ttft_s or slo_tpot_s):
+            # convert the seconds targets into the scheduler's rounds
+            # clock via the winning schedule's predicted round latency
+            rl = g.predicted_per_token_s
+            if rl and rl > 0:
+                slo = SLO(
+                    ttft_rounds=(max(int(slo_ttft_s / rl), 1)
+                                 if slo_ttft_s else None),
+                    tpot_rounds=((slo_tpot_s / rl)
+                                 if slo_tpot_s else None))
         return BatchScheduler(eng, max_inflight=g.inflight,
                               max_total_len=(max_total_len
                                              or prompt_len + new_tokens),
                               prefix_cache=prefix_cache, seed=seed,
                               draft=(draft if g.spec_depth else None),
-                              spec_depth=g.spec_depth)
+                              spec_depth=g.spec_depth,
+                              chunk_prefill=(chunk_prefill
+                                             if g.page_size else 0),
+                              slo=slo)
 
     def execute(self, tokens, *, generate: int = 0, mode: str = "pipeload",
                 budget_bytes: Optional[int] = None,

@@ -246,6 +246,52 @@ class PrefixTree:
 
 
 # ===========================================================================
+# Per-tenant prefix namespaces
+# ===========================================================================
+class PrefixNamespaces:
+    """Tenant-keyed family of ``PrefixTree``s over ONE shared ``PagePool``.
+
+    Multi-tenant serving must not leak one tenant's prompt content into
+    another's cache reuse: a prefix hit proves the requester already
+    knows the tokens, so cross-tenant sharing is a timing/content oracle.
+    Namespacing the radix index by tenant id makes isolation structural —
+    two tenants submitting byte-identical system prompts map DISJOINT
+    physical pages, while requests within a tenant still share theirs.
+    The physical pool stays shared (pages are just rows; isolation is an
+    indexing property), so retirement in one tenant can never free
+    another tenant's pages: their refcounts live on separate nodes.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._trees: Dict[str, PrefixTree] = {}
+
+    def tree(self, tenant: str) -> PrefixTree:
+        """The tenant's own radix tree (created on first use)."""
+        t = self._trees.get(tenant)
+        if t is None:
+            t = self._trees[tenant] = PrefixTree(self.page_size)
+        return t
+
+    @property
+    def tenants(self) -> List[str]:
+        return sorted(self._trees)
+
+    @property
+    def hits(self) -> int:
+        """Prefix-hit pages, summed across tenants (each hit is by
+        construction a WITHIN-tenant share)."""
+        return sum(t.hits for t in self._trees.values())
+
+    @property
+    def misses(self) -> int:
+        return sum(t.misses for t in self._trees.values())
+
+    def hits_by_tenant(self) -> Dict[str, int]:
+        return {k: t.hits for k, t in sorted(self._trees.items())}
+
+
+# ===========================================================================
 # Per-request block table
 # ===========================================================================
 @dataclasses.dataclass

@@ -92,6 +92,10 @@ class GenPlanEntry:
     page_size: int = 0                # KV page size (0 = dense reservation)
     spec_depth: int = 0               # draft tokens per verify round
     draft_bytes: int = 0              # pinned draft + per-req cache rows
+    predicted_ttft_s: float = 0.0     # queue-free time-to-first-token
+    predicted_tpot_s: float = 0.0     # expected time per output token
+    slo_ok: bool = True               # meets the requested TTFT/TPOT SLO
+    chunk_prefill: int = 0            # prefill chunk tokens (0 = monolithic)
 
 
 # ---------------------------------------------------------------------------
@@ -259,8 +263,8 @@ def _better(cand, best) -> bool:
 
 def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
                 ) -> bool:
-    """Generation-tier comparator: feasibility, then latency — but a
-    LATENCY TIE goes to the deeper pin window.  When loads overlap
+    """Generation-tier comparator: feasibility, then SLO attainment,
+    then latency — but a LATENCY TIE goes to the deeper pin window.  When loads overlap
     compute completely (fast disk, warm page cache) the simulator
     predicts identical round latency for every pin that hides the first
     load, yet each unpinned layer still costs a real disk read per
@@ -272,6 +276,8 @@ def _gen_better(cand: "GenPlanEntry", best: Optional["GenPlanEntry"]
         return True
     if cand.feasible != best.feasible:
         return cand.feasible
+    if cand.slo_ok != best.slo_ok:
+        return cand.slo_ok
     a, b = cand.predicted_latency_s, best.predicted_latency_s
     if not (math.isfinite(a) and math.isfinite(b)):
         return a < b
@@ -418,7 +424,10 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                   total_len: Optional[int] = None,
                   shared_prefix_len: int = 0,
                   spec_depths: Tuple[int, ...] = (),
-                  spec_draft: Optional[Dict] = None
+                  spec_draft: Optional[Dict] = None,
+                  slo_ttft_s: Optional[float] = None,
+                  slo_tpot_s: Optional[float] = None,
+                  chunk_prefill: int = 0
                   ) -> List[GenPlanEntry]:
     """Joint (num_agents, pin_window, inflight) schedule for KV-cache
     generation and continuous-batching serving — over one profile, or
@@ -471,6 +480,20 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     searched) is plain decoding, so speculation wins only where the
     acceptance rate actually buys rounds; the winning entry's
     ``spec_depth``/``draft_bytes`` feed the scheduler.
+
+    The **SLO dimension** (``slo_ttft_s`` / ``slo_tpot_s``): every
+    candidate carries a queue-free TTFT prediction (the prefill-round
+    latency — or, with ``chunk_prefill > 0``, ``ceil(prompt / chunk)``
+    chunk-joined decode rounds, each simulated with the chunk's tokens
+    stacked onto the decode batch) and a TPOT prediction (round latency
+    over expected committed tokens).  ``slo_ok`` marks candidates whose
+    predictions meet both targets; the comparator prefers SLO-meeting
+    schedules right after feasibility, and the capacity-first loop
+    breaks only on a feasible AND SLO-meeting count — admitting fewer
+    concurrent requests to protect latency targets.  When NO feasible
+    candidate attains the SLO at any count, the planner falls back to
+    the best feasible schedule (serve degraded rather than not at all)
+    with ``slo_ok=False`` so callers can surface the miss.
     """
     profiles = [(label, _with_decode_times(p))
                 for label, p in _as_profiles(profile)]
@@ -483,8 +506,19 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     if spec_depths and not page_sizes:
         raise ValueError("spec_depths search requires page_sizes (the "
                          "verify window rides the paged KV block tables)")
+    if chunk_prefill and spec_depths:
+        raise ValueError("chunk_prefill is incompatible with spec_depths "
+                         "(the scheduler forbids chunked prefill in "
+                         "speculative mode)")
     ps_grid = [0] + [int(p) for p in page_sizes if p and p > 0]
     depth_grid = [0] + [int(d) for d in spec_depths if d and d > 0]
+    chunk = max(int(chunk_prefill), 0)
+    if chunk:
+        # chunked prefill writes through the paged KV kernel, so the
+        # dense candidate cannot serve it — the paged grid is the grid
+        if len(ps_grid) < 2:
+            raise ValueError("chunk_prefill requires page_sizes")
+        ps_grid = ps_grid[1:]
     accept = (min(max(float(spec_draft.get("acceptance", 0.8)), 0.0), 1.0)
               if spec_draft else 0.0)
     draft_t = float(spec_draft.get("t_token", 0.0)) if spec_draft else 0.0
@@ -586,10 +620,38 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                     exp = expected_commit(depth)
                     n_rounds = math.ceil(rounds / exp) if rounds else 0
                     round_lat = dec_lat + depth * draft_t
-                    total = pre_lat + n_rounds * round_lat
-                    peak = max(pre_peak, dec_peak)
+                    prompt_len = (max(total_len - new_tokens, 1)
+                                  if total_len else seq)
+                    if chunk and prompt_len > chunk and ps:
+                        # chunked prefill replaces the monolithic
+                        # cache-capture round with ceil(Lp/C) decode-shaped
+                        # rounds, each stacking C chunk tokens onto the
+                        # decode batch — the weight stream is unchanged,
+                        # compute scales with the joined width
+                        n_chunks = math.ceil(prompt_len / chunk)
+                        ch_lat, ch_peak = simulate(
+                            dec_prof, m, budget, pin_window=pin,
+                            extra_resident_bytes=resident,
+                            t_comp_key="t_decode", batch=r + chunk)
+                        ttft = n_chunks * ch_lat
+                        total = ttft + n_rounds * round_lat
+                        peak = max(ch_peak, dec_peak)
+                        pre_lat = ttft
+                    else:
+                        ttft = pre_lat
+                        total = pre_lat + n_rounds * round_lat
+                        peak = max(pre_peak, dec_peak)
+                    tpot = (round_lat / exp
+                            if (round_lat and math.isfinite(round_lat))
+                            else math.inf)
                     ok = math.isfinite(total) and (budget is None
                                                    or peak <= budget)
+                    slo = ((slo_ttft_s is None
+                            or (math.isfinite(ttft)
+                                and ttft <= slo_ttft_s))
+                           and (slo_tpot_s is None
+                                or (math.isfinite(tpot)
+                                    and tpot <= slo_tpot_s)))
                     tput = r * exp / round_lat \
                         if (round_lat and math.isfinite(round_lat)) \
                         else 0.0
@@ -601,7 +663,12 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                                         expert_cache_bytes=cbytes,
                                         page_size=ps,
                                         spec_depth=depth,
-                                        draft_bytes=dbytes)
+                                        draft_bytes=dbytes,
+                                        predicted_ttft_s=ttft,
+                                        predicted_tpot_s=tpot,
+                                        slo_ok=slo,
+                                        chunk_prefill=(
+                                            chunk if ps else 0))
                     if _gen_better(cand, best):
                         best = cand
         return best
@@ -609,6 +676,7 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
     entries: List[GenPlanEntry] = []
     for budget in budgets:
         chosen: Optional[GenPlanEntry] = None
+        fallback: Optional[GenPlanEntry] = None   # best feasible, SLO-miss
         for r in range(max(max_inflight, 1), 0, -1):   # capacity-first
             # candidates union over dtype: a dtype whose shards admit
             # this in-flight count wins over one that must shed requests
@@ -618,9 +686,15 @@ def plan_generate(profile, budgets: List[Optional[int]], *,
                 if c is not None and _gen_better(c, cand):
                     cand = c
             if cand is not None and cand.feasible:
-                chosen = cand
-                break
-            if r == 1:                 # nothing feasible: report the least
-                chosen = cand          # infeasible single-request schedule
+                if cand.slo_ok:        # feasible AND meets the SLO: done
+                    chosen = cand
+                    break
+                if fallback is None:   # largest feasible count, kept in
+                    fallback = cand    # case no count attains the SLO
+            if r == 1 and chosen is None:
+                # no feasible SLO-meeting schedule at any count: serve
+                # degraded (best feasible, slo_ok=False) — or report the
+                # least infeasible single-request schedule
+                chosen = fallback if fallback is not None else cand
         entries.append(chosen)
     return entries

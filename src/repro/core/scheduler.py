@@ -73,6 +73,49 @@ tables + COW slack) so jitted decode shapes never change; the ledger
 only ever charges MAPPED pages, and the decode attention gathers K/V
 tiles through the block table (Pallas kernel under
 ``attn_impl="pallas"``, kernels/paged_decode.py).
+
+**Serving tier** (multi-tenant SLO serving on top of the mechanisms
+above):
+
+  * *Priority classes with preemption.*  ``submit(..., priority=p)``
+    orders the queue by ``(-priority, arrival_round, rid)`` and admission
+    may BOUNCE an in-flight request back to the queue to make room for a
+    strictly-higher-priority arrival — the victim is always the
+    lowest-priority, youngest-admitted in-flight request, the same
+    ordering growth-preemption uses, so the no-deadlock argument is
+    unchanged: ``submit()`` proved every request fits alone, victims
+    release their ledger bytes exactly (``release_all``), and a bounced
+    request re-prefills from its tokens-so-far on re-admission.
+    Preemption only ever flows downhill (never equal or higher
+    priority), so a boundary's admission loop terminates and a
+    bounded-priority trace cannot starve: high classes drain in finite
+    rounds, then the bounced request is the queue head again.
+  * *Chunked prefill* (``chunk_prefill=C``, paged mode, page-aligned:
+    ``C`` rounds up to a page multiple).  A prompt longer than ``C``
+    joins decode rounds as a sequence of C-token chunk jobs riding the
+    stacked ``layer_verify_paged`` window (the speculative-verify
+    module): each round streams the layers ONCE and applies them to the
+    decode batch AND every in-flight chunk, writing the chunk's K/V
+    straight into the request's pages in-kernel — so a long prompt costs
+    ``ceil(L/C)`` decode-shaped rounds instead of stalling every
+    in-flight decode behind one monolithic prefill round.  The final
+    chunk is padded to width ``C`` by RE-feeding the preceding tokens at
+    their own positions (bitwise-identical K/V rewrites — the draft
+    catch-up trick), and its last column feeds the head for the first
+    generated token.  The jnp verify path reuses the decode attention
+    exactly, so chunked prefill is token-identical to unchunked serving
+    up to the usual prefill-vs-decode float-reassociation caveat.
+  * *Per-tenant prefix namespaces.*  ``submit(..., tenant=t)`` keys the
+    radix prefix index by tenant (``PrefixNamespaces``): system prompts
+    share pages WITHIN a tenant, never across — isolation is structural,
+    and retirement in one tenant can never free another's pages.
+  * *SLO accounting + shedding.*  ``slo=SLO(...)`` sets TTFT/TPOT
+    targets in ROUNDS (the deterministic clock — a replayed trace meets
+    or misses them identically on any machine); ``ServeStats`` reports
+    p50/p99 TTFT and TPOT in rounds and seconds, preemption counts and
+    goodput-under-SLO, and ``SLO.shed=True`` rejects queued requests
+    whose TTFT target is already unattainable at admission time instead
+    of burning rounds on doomed work.
 """
 from __future__ import annotations
 
@@ -85,7 +128,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import DraftModel, PipeloadEngine, _Ledger
-from repro.core.kv_pages import BlockTable, PagePool, PrefixTree, pages_for
+from repro.core.kv_pages import (BlockTable, PagePool, PrefixNamespaces,
+                                 pages_for)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Service-level objectives in ROUNDS — the scheduler's deterministic
+    clock, so a replayed trace attains or misses them identically on any
+    machine (wall-clock percentiles are reported alongside, but policy
+    decisions never read the wall clock).
+
+    ``ttft_rounds``: a request attains its TTFT target when its first
+    token lands within that many rounds of arrival (inclusive — 1 means
+    "the arrival round itself").  ``tpot_rounds``: average rounds per
+    subsequent token (1.0 = a token every round; only speculative
+    serving goes below 1).  ``shed=True`` additionally REJECTS a queued
+    request at admission time once its TTFT target is provably
+    unattainable (queueing delay alone already exceeds it) — shedding
+    doomed work is how goodput-under-SLO beats raw throughput under
+    overload."""
+    ttft_rounds: Optional[int] = None
+    tpot_rounds: Optional[float] = None
+    shed: bool = False
 
 
 @dataclasses.dataclass
@@ -95,6 +160,8 @@ class Request:
     prompt: np.ndarray            # (S,) int token ids
     max_new_tokens: int
     arrival_round: int = 0        # earliest boundary it may be admitted at
+    priority: int = 0             # higher = admitted (and kept) first
+    tenant: str = "default"       # prefix-namespace key
     # -- scheduler state ------------------------------------------------
     tokens: List[int] = dataclasses.field(default_factory=list)
     generated: int = 0
@@ -103,6 +170,17 @@ class Request:
     cache_bytes: int = 0          # ledger reservation while in flight
     table: Optional[BlockTable] = None   # paged mode: page ids + n_shared
     draft_pos: int = 0            # speculative: draft cache slots valid
+    # -- chunked prefill ------------------------------------------------
+    prefilling: bool = False      # True while chunks are still feeding
+    prefill_pos: int = 0          # tokens whose K/V is already paged in
+    # -- SLO accounting -------------------------------------------------
+    born_round: int = 0           # original arrival (preemption re-queues
+                                  # mutate arrival_round; TTFT uses this)
+    first_token_round: int = -1
+    rejected: bool = False        # shed by SLO admission control
+    t_arrival: float = -1.0       # wall-clock marks (observability only)
+    t_first: float = -1.0
+    t_done: float = -1.0
 
     @property
     def done(self) -> bool:
@@ -148,10 +226,38 @@ class ServeStats:
     spec_rounds: int = 0           # verify rounds executed
     draft_tokens: int = 0          # proposals the draft emitted
     accepted_tokens: int = 0       # proposals the target committed
+    # serving-tier extras (SLO / multi-tenant / chunked prefill)
+    tenants: int = 0               # distinct tenant namespaces served
+    chunk_size: int = 0            # chunked-prefill chunk tokens (0 = off)
+    chunk_jobs: int = 0            # prefill chunks joined into rounds
+    ttft_p50_rounds: float = 0.0   # rounds from arrival to first token
+    ttft_p99_rounds: float = 0.0
+    tpot_p50_rounds: float = 0.0   # rounds per subsequent token
+    tpot_p99_rounds: float = 0.0
+    ttft_p50_s: float = 0.0        # wall-clock mirrors (observability)
+    ttft_p99_s: float = 0.0
+    tpot_p50_s: float = 0.0
+    tpot_p99_s: float = 0.0
+    slo_attained: float = 1.0      # fraction of requests meeting the SLO
+    goodput_tokens: int = 0        # tokens from requests meeting the SLO
+    slo_rejections: int = 0        # requests shed at admission
+    # policy trace for golden-file regression tests: (kind, rid, round)
+    # for every admit / preempt / retire / reject decision, in order —
+    # deterministic under a fixed trace (no wall-clock terms)
+    policy: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
         return self.new_tokens / self.latency_s if self.latency_s else 0.0
+
+    @property
+    def goodput_tokens_per_s(self) -> float:
+        """Goodput-under-SLO: only tokens from requests that met every
+        SLO target count (the serving-tier objective — raw tokens/s
+        rewards work the user already gave up on)."""
+        return (self.goodput_tokens / self.latency_s
+                if self.latency_s else 0.0)
 
     @property
     def expert_hit_rate(self) -> float:
@@ -185,7 +291,9 @@ class BatchScheduler:
                  prefix_cache: bool = True,
                  seed: Optional[int] = None,
                  draft: Optional[DraftModel] = None,
-                 spec_depth: int = 0):
+                 spec_depth: int = 0,
+                 chunk_prefill: int = 0,
+                 slo: Optional[SLO] = None):
         if engine.mode == "baseline":
             raise ValueError("continuous batching needs a pipelined mode "
                              "(pipeload / pipeswitch)")
@@ -211,8 +319,37 @@ class BatchScheduler:
                 raise ValueError(
                     "engine's model fns lack layer_verify_paged "
                     "(speculative verify); architecture unsupported")
+        # chunked prefill (serving tier): prompts longer than ``chunk``
+        # tokens prefill C tokens per round through the stacked verify
+        # window instead of one monolithic prefill round
+        self.chunk = 0
+        if chunk_prefill and chunk_prefill > 0:
+            if not self.page_size:
+                raise ValueError(
+                    "chunked prefill needs paged KV (chunks write K/V "
+                    "through the block tables); set page_size")
+            if self.spec_depth:
+                raise ValueError(
+                    "chunked prefill and speculative serving are "
+                    "mutually exclusive (both reshape the round); pick "
+                    "one")
+            if "layer_verify_paged" not in engine.fns:
+                raise ValueError(
+                    "engine's model fns lack layer_verify_paged (the "
+                    "chunk window); architecture unsupported for "
+                    "chunked prefill")
+            # page-aligned chunks: non-final chunk boundaries land on
+            # page boundaries, so a chunk never splits a page's writes
+            # across rounds
+            ps = self.page_size
+            self.chunk = -(-int(chunk_prefill) // ps) * ps
+        self.slo = slo
+        self.slo_rejections = 0
+        # (kind, rid, round) policy decisions — the golden-trace log
+        self.policy_log: List[Tuple[str, int, int]] = []
+        self._chunk_jobs = 0
         self.seed = seed
-        self.queue: List[Request] = []      # FIFO by (arrival_round, rid)
+        self.queue: List[Request] = []   # by (-priority, arrival, rid)
         self.inflight: List[Request] = []
         self.done: Dict[int, Request] = {}
         self.round = 0
@@ -231,7 +368,9 @@ class BatchScheduler:
                                * engine.cfg.cache_bytes(1, max_total_len))
         # ---- paged-KV state (None/unused in dense mode) ----
         self.pool: Optional[PagePool] = None
-        self.tree: Optional[PrefixTree] = None
+        # per-tenant radix indexes over ONE shared pool: prefix pages
+        # share within a tenant, never across (kv_pages.PrefixNamespaces)
+        self.tree: Optional[PrefixNamespaces] = None
         self._pools: Optional[Dict[str, dict]] = None  # layer -> (P, ps, ..)
         self.preemptions = 0
         if self.page_size:
@@ -249,7 +388,7 @@ class BatchScheduler:
             self._page_bytes = (len(engine.layer_names)
                                 * engine.cfg.cache_bytes(1, ps))
             self.pool = PagePool(ps, self._page_bytes, self.ledger)
-            self.tree = PrefixTree(ps) if prefix_cache else None
+            self.tree = PrefixNamespaces(ps) if prefix_cache else None
             # fixed physical pool rows: worst-case tables + COW slack,
             # sized ONCE so jitted decode shapes never change (the
             # ledger charges only MAPPED pages; these rows are buffer)
@@ -298,13 +437,19 @@ class BatchScheduler:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
-               arrival_round: int = 0) -> int:
+               arrival_round: int = 0, *, priority: int = 0,
+               tenant: str = "default") -> int:
         """Queue a request; returns its id.
+
+        ``priority`` orders admission (higher first; ties FIFO) and a
+        strictly-higher-priority arrival may preempt the lowest-priority
+        youngest in-flight request to get in.  ``tenant`` names the
+        prefix namespace its prompt pages may share within.
 
         Raises if the request could NEVER be admitted — a prompt +
         generation length beyond ``max_total_len``, or a cache
         reservation that exceeds the budget floor even with zero other
-        requests in flight (admission would otherwise deadlock the FIFO
+        requests in flight (admission would otherwise deadlock the
         queue head forever)."""
         prompt = np.asarray(prompt).reshape(-1)
         if max_new_tokens < 1:
@@ -336,11 +481,26 @@ class BatchScheduler:
             per_req = self._per_req_cache
         req = Request(self._next_rid, prompt, max_new_tokens,
                       arrival_round=max(arrival_round, 0),
-                      cache_bytes=per_req)
+                      priority=int(priority), tenant=str(tenant),
+                      cache_bytes=per_req,
+                      born_round=max(arrival_round, 0))
         self._next_rid += 1
         self.queue.append(req)
-        self.queue.sort(key=lambda r: (r.arrival_round, r.rid))
+        self._sort_queue()
         return req.rid
+
+    def _sort_queue(self) -> None:
+        """Priority lattice: higher classes first, FIFO within a class
+        (a preempted request re-enters with arrival_round = now, so it
+        queues behind its class's newest arrivals — bounded classes
+        cannot starve it)."""
+        self.queue.sort(key=lambda r: (-r.priority, r.arrival_round,
+                                       r.rid))
+
+    def _tree(self, req: Request):
+        """The request's tenant-namespace radix tree (None when prefix
+        caching is off)."""
+        return self.tree.tree(req.tenant) if self.tree is not None else None
 
     # ------------------------------------------------------------------
     def _fits(self, extra_cache: int) -> bool:
@@ -400,17 +560,24 @@ class BatchScheduler:
         this boundary."""
         toks = req.tokens or [int(t) for t in req.prompt]
         n_pages = pages_for(len(toks), self.page_size)
-        walk = self.tree.walk(toks) if self.tree is not None else None
+        tree = self._tree(req)      # tenant namespace: within-tenant hits
+        walk = tree.walk(toks) if tree is not None else None
         shared = len(walk[0]) if walk is not None else 0
         if not self._fits_paged(n_pages - shared, inflight_after):
             return False
-        if self.tree is not None:
-            pids, n_shared = self.tree.insert(toks, self.pool, walk=walk)
+        if tree is not None:
+            pids, n_shared = tree.insert(toks, self.pool, walk=walk)
         else:
             pids, n_shared = [self.pool.alloc()
                               for _ in range(n_pages)], 0
         req.table = BlockTable(pids, n_shared)
         req.tokens = toks
+        if self.chunk and len(toks) > self.chunk:
+            # long prompt: feed it C tokens per round as chunk jobs
+            # (pages are all mapped already; chunking spreads the
+            # COMPUTE, not the reservation)
+            req.prefilling = True
+            req.prefill_pos = 0
         if self.spec_depth:
             # the request's dense draft-cache row lives as long as the
             # request is in flight (never blocks: _fits_paged charged it
@@ -419,33 +586,59 @@ class BatchScheduler:
         return True
 
     def _preempt(self, victim: Request) -> None:
-        """Bounce ``victim`` back to the queue, freeing its non-shared
-        pages; it re-prefills from its tokens so far on re-admission."""
-        victim.table.release_all(self.pool, self.tree)
-        if self.spec_depth:
-            idx = self.inflight.index(victim)
-            self._draft_caches = self._rows_keep(
-                self._draft_caches,
-                [i for i in range(len(self.inflight)) if i != idx])
-            self.ledger.release(self._draft_cache_bytes)
-        self.inflight.remove(victim)
+        """Bounce ``victim`` back to the queue, releasing its ledger
+        bytes exactly (non-shared pages in paged mode, the whole dense
+        reservation otherwise); it re-prefills from its tokens so far on
+        re-admission."""
+        idx = self.inflight.index(victim)
+        if self.page_size:
+            victim.table.release_all(self.pool, self._tree(victim))
+            if self.spec_depth:
+                self._draft_caches = self._rows_keep(
+                    self._draft_caches,
+                    [i for i in range(len(self.inflight)) if i != idx])
+                self.ledger.release(self._draft_cache_bytes)
+        else:
+            self.ledger.release(victim.cache_bytes)
+            self._cache_resident -= victim.cache_bytes
+            self._drop_rows([i for i in range(len(self.inflight))
+                             if i != idx])
+        self.inflight.pop(idx)
         victim.admitted_round = -1
         victim.arrival_round = self.round
+        victim.prefilling = False
+        victim.prefill_pos = 0
         self.queue.append(victim)
-        self.queue.sort(key=lambda r: (r.arrival_round, r.rid))
+        self._sort_queue()
         self.preemptions += 1
         self.events.append((time.perf_counter() - self._t0,
                             "preempt", f"req{victim.rid}"))
+        self.policy_log.append(("preempt", victim.rid, self.round))
+
+    def _victim(self, below: Optional[int] = None) -> Optional[Request]:
+        """The preemption victim: lowest priority first, youngest
+        admission within a class — the generalisation of the original
+        youngest-first order (all priorities equal reduces to it).
+        ``below`` restricts to strictly-lower-priority victims (admission
+        preemption only flows downhill; growth passes None and may pick
+        any request, including the grower itself)."""
+        cands = [r for r in self.inflight
+                 if below is None or r.priority < below]
+        if not cands:
+            return None
+        order = {id(r): i for i, r in enumerate(self.inflight)}
+        return min(cands, key=lambda r: (r.priority, -order[id(r)]))
 
     def _alloc_with_preemption(self, req: Request) -> Optional[int]:
-        """Map one more page for ``req``, preempting the YOUNGEST
-        in-flight request — possibly ``req`` itself — while the floor
-        would not clear (strict age order: an older request's progress
-        is never sacrificed for a younger grower).  Returns None when
-        ``req`` was the victim; otherwise always succeeds — once ``req``
-        is alone, submit() guaranteed its worst case fits."""
+        """Map one more page for ``req``, preempting the lowest-priority
+        YOUNGEST in-flight request — possibly ``req`` itself — while the
+        floor would not clear (within a priority class this is the
+        original strict age order: an older request's progress is never
+        sacrificed for a younger grower).  Returns None when ``req`` was
+        the victim; otherwise always succeeds — once ``req`` is alone,
+        submit() guaranteed its worst case fits."""
         while not self._fits_paged(1, 0) and len(self.inflight) > 1:
-            victim = self.inflight[-1]        # admission-ordered: youngest
+            victim = self._victim()
             self._preempt(victim)
             if victim is req:
                 return None
@@ -470,6 +663,12 @@ class BatchScheduler:
         for req in list(self.inflight):
             if req not in self.inflight:    # preempted by an earlier grower
                 continue
+            if req.prefilling:
+                # chunked prefill: every page was mapped at admission and
+                # chunk writes land in the request's own prompt pages (or
+                # rewrite shared pages with bitwise-identical K/V), so a
+                # prefilling request neither grows nor copy-on-writes
+                continue
             t = req.table
             lo = req.pos // self.page_size
             hi = (req.pos + self.spec_depth) // self.page_size
@@ -491,8 +690,10 @@ class BatchScheduler:
                 # usually the sibling keeps the old page — but if the
                 # COW alloc preempted that sibling, this drop is the
                 # LAST reference and the tree node must go with it
-                if self.pool.release(pid) and self.tree is not None:
-                    self.tree.forget(pid)
+                # (prefix pages only ever index the OWNER's tenant tree)
+                tree = self._tree(req)
+                if self.pool.release(pid) and tree is not None:
+                    tree.forget(pid)
                 t.pages[pidx] = new
         # drop copies whose OWNER was preempted after queuing them (its
         # freed target id may already be re-mapped by a later grower —
@@ -560,37 +761,103 @@ class BatchScheduler:
                 lambda leaf, rr: leaf.at[pids].set(rr.astype(leaf.dtype)),
                 self._pools[name], stacked)
 
+    def _chunk_rounds(self, req: Request) -> int:
+        """Rounds this request's prefill will take once admitted (1 for
+        the monolithic path; ``ceil(L / C)`` chunk rounds otherwise)."""
+        n = len(req.tokens) or len(req.prompt)
+        if not (self.chunk and self.page_size and n > self.chunk):
+            return 1
+        return -(-n // self.chunk)
+
+    def _shed(self, req: Request) -> bool:
+        """SLO admission control: reject a request whose TTFT target is
+        already unattainable — even admitted THIS boundary, its first
+        token cannot land inside the target (queueing delay + its own
+        prefill rounds already exceed it).  Burning rounds on it would
+        only push other requests past their targets too."""
+        if (self.slo is None or not self.slo.shed
+                or self.slo.ttft_rounds is None):
+            return False
+        if req.first_token_round >= 0:
+            # a preempted request already delivered its first token; its
+            # TTFT is decided — bouncing it again cannot be shed
+            return False
+        best_ttft = (self.round - req.born_round) + self._chunk_rounds(req)
+        if best_ttft <= self.slo.ttft_rounds:
+            return False
+        self.queue.remove(req)
+        req.rejected = True
+        req.finished_round = self.round
+        self.done[req.rid] = req
+        self.slo_rejections += 1
+        self.events.append((time.perf_counter() - self._t0,
+                            "reject", f"req{req.rid}"))
+        self.policy_log.append(("reject", req.rid, self.round))
+        return True
+
+    def _reserve(self, req: Request, inflight_after: int) -> bool:
+        """Try to reserve the request's cache at this boundary (maps
+        pages / acquires the dense reservation on success)."""
+        if self.page_size:
+            return self._admit_one_paged(req, inflight_after)
+        if not self._fits(req.cache_bytes):
+            return False
+        # reserve the request's pages for its whole lifetime (never
+        # blocks: _fits checked the floor, and at a boundary nothing is
+        # streaming)
+        self.ledger.acquire(req.cache_bytes, lambda: False)
+        self._cache_resident += req.cache_bytes
+        self._cache_peak = max(self._cache_peak, self._cache_resident)
+        # a preempted request resumes from its tokens so far (re-prefill),
+        # a fresh one starts from its prompt
+        req.tokens = req.tokens or list(map(int, req.prompt))
+        return True
+
     def _admit(self) -> List[Request]:
-        """FIFO admission at the current boundary.  Strict head-of-line:
-        skipping the head could never help (dense mode reserves one
-        padded size for everyone; paged mode's head is also the next to
-        shrink via sharing); blocking keeps arrival order fair and is
-        deadlock-free (submit() rejected anything that can't fit alone,
-        and in-flight requests always retire in finite rounds)."""
+        """Priority-ordered admission at the current boundary.  Strict
+        head-of-line WITHIN the eligible queue (sorted by priority class,
+        FIFO inside a class): skipping the head could never help (dense
+        mode reserves one padded size for everyone; paged mode's head is
+        also the next to shrink via sharing); blocking keeps the order
+        fair and is deadlock-free (submit() rejected anything that can't
+        fit alone, and in-flight requests always retire in finite
+        rounds).  A head that does not fit may PREEMPT strictly-lower-
+        priority in-flight requests (lowest class, youngest first) for
+        both a concurrency slot and cache room — preemption only flows
+        downhill, so a boundary's loop terminates: each bounced request
+        re-queues behind its own class and can only displace still-lower
+        ones."""
         admitted: List[Request] = []
-        while (self.queue
-               and self.queue[0].arrival_round <= self.round
-               and len(self.inflight) + len(admitted) < self.max_inflight):
-            req = self.queue[0]
-            if self.page_size:
-                if not self._admit_one_paged(
-                        req, len(self.inflight) + len(admitted) + 1):
+        while self.queue:
+            eligible = [r for r in self.queue
+                        if r.arrival_round <= self.round]
+            if not eligible:
+                break
+            req = eligible[0]           # queue order: priority, then FIFO
+            if self._shed(req):
+                continue
+            # concurrency slot: bounce a strictly-lower-priority victim
+            if len(self.inflight) + len(admitted) >= self.max_inflight:
+                victim = self._victim(below=req.priority)
+                if victim is None:
                     break
-            else:
-                if not self._fits(req.cache_bytes):
+                self._preempt(victim)
+                continue                # victim re-queued; re-evaluate
+            ok = self._reserve(req, len(self.inflight) + len(admitted) + 1)
+            while not ok:
+                victim = self._victim(below=req.priority)
+                if victim is None:
                     break
-                # reserve the request's pages for its whole lifetime
-                # (never blocks: _fits checked the floor, and at a
-                # boundary nothing is streaming)
-                self.ledger.acquire(req.cache_bytes, lambda: False)
-                self._cache_resident += req.cache_bytes
-                self._cache_peak = max(self._cache_peak,
-                                       self._cache_resident)
-                req.tokens = list(map(int, req.prompt))
-            self.queue.pop(0)
+                self._preempt(victim)
+                ok = self._reserve(req,
+                                   len(self.inflight) + len(admitted) + 1)
+            if not ok:
+                break
+            self.queue.remove(req)
             req.admitted_round = self.round
             self.events.append((time.perf_counter() - self._t0,
                                 "admit", f"req{req.rid}"))
+            self.policy_log.append(("admit", req.rid, self.round))
             admitted.append(req)
         return admitted
 
@@ -602,16 +869,17 @@ class BatchScheduler:
         page granularity)."""
         for req in finished:
             if self.page_size:
-                req.table.release_all(self.pool, self.tree)
+                req.table.release_all(self.pool, self._tree(req))
                 if self.spec_depth:
                     self.ledger.release(self._draft_cache_bytes)
             else:
                 self.ledger.release(req.cache_bytes)
                 self._cache_resident -= req.cache_bytes
             req.finished_round = self.round
+            req.t_done = time.perf_counter() - self._t0
             self.done[req.rid] = req
-            self.events.append((time.perf_counter() - self._t0,
-                                "retire", f"req{req.rid}"))
+            self.events.append((req.t_done, "retire", f"req{req.rid}"))
+            self.policy_log.append(("retire", req.rid, self.round))
 
     def _drop_rows(self, keep: List[int]):
         if self._caches is None:
@@ -696,10 +964,42 @@ class BatchScheduler:
         return props
 
     # ------------------------------------------------------------------
+    def _first_token(self, req: Request) -> None:
+        """TTFT bookkeeping: called right before a request's FIRST
+        generated token is appended (re-admitted preempted requests have
+        generated > 0 and keep their original mark)."""
+        if req.generated == 0 and req.first_token_round < 0:
+            req.first_token_round = self.round
+            req.t_first = time.perf_counter() - self._t0
+
+    def _ensure_chunk_pools(self) -> None:
+        """Chunk jobs write K/V straight into the physical pools, so the
+        pool arrays must exist before the first chunk round — even when
+        no monolithic prefill ever captured a cache template.  Builds the
+        template from one transient layer load (warmup does this ahead
+        of time; this is the cold-start fallback)."""
+        if self._pools is not None:
+            return
+        eng = self.engine
+        eng._ensure_aux(self.ledger, self.events, self._t0)
+        emb = eng._resident["embed"]
+        w0 = eng._load(eng.layer_names[0])
+        x1 = eng.fns["embed"](emb, jnp.zeros((1, 1), jnp.int32))
+        _, c1 = eng._layer_cache(0, w0, x1, self._nb * self.page_size)
+        del w0
+        self._ensure_pool_arrays({name: c1 for name in eng.layer_names})
+
     def step(self) -> bool:
         """One round boundary + (if there is work) one pipeline round.
         Returns False once every submitted request has retired."""
         eng = self.engine
+        now = time.perf_counter() - self._t0
+        for r in self.queue:
+            # wall-clock arrival mark: the first boundary at/after the
+            # request's arrival round (rounds are the policy clock; the
+            # wall marks only feed observability percentiles)
+            if r.arrival_round <= self.round and r.t_arrival < 0:
+                r.t_arrival = now
         if self.page_size:
             # map every decoder's write page first (may preempt), THEN
             # admit into whatever room is left
@@ -716,55 +1016,100 @@ class BatchScheduler:
         fns, t0 = eng.fns, self._t0
         self.events.append((time.perf_counter() - t0, "round",
                             str(self.round)))
+        # serving-tier round shape: DECODERS advance one token through
+        # the stacked decode batch; CHUNKERS (mid-chunked-prefill, plus
+        # this boundary's long-prompt admissions) feed one C-token chunk
+        # each through the stacked verify window; unchunked admissions
+        # run the monolithic cache-capturing prefill
+        decoders = [r for r in self.inflight if not r.prefilling]
+        chunkers = ([r for r in self.inflight if r.prefilling]
+                    + [r for r in admitted if r.prefilling])
+        pre_admits = [r for r in admitted if not r.prefilling]
         # ---- build the decode batch (stacked last tokens, ragged pos;
         # speculative mode widens each row to its verify window
         # [last committed token, draft proposals...])
         dec_x = dec_pos = props = None
-        if self.inflight:
+        if decoders:
             emb = eng._resident.get("embed")
             if emb is None:
                 eng._ensure_aux(self.ledger, self.events, t0)
                 emb = eng._resident["embed"]
             if self.spec_depth:
+                # spec mode never chunks (ctor enforces it), so the
+                # decode rows stay parallel to self.inflight
                 props = self._draft_propose()
                 last = np.asarray(
                     [[r.tokens[-1]] + props[i]
-                     for i, r in enumerate(self.inflight)], np.int32)
+                     for i, r in enumerate(decoders)], np.int32)
             else:
-                last = np.asarray([[r.tokens[-1]] for r in self.inflight],
+                last = np.asarray([[r.tokens[-1]] for r in decoders],
                                   np.int32)
             dec_x = fns["embed"](emb, jnp.asarray(last))
-            dec_pos = jnp.asarray([r.pos for r in self.inflight], jnp.int32)
-        # ---- build prefill jobs for this boundary's admissions
-        pre_xs = []
-        if admitted:
+            dec_pos = jnp.asarray([r.pos for r in decoders], jnp.int32)
+        # ---- build the stacked chunk batch: row i feeds C tokens at
+        # positions [start, start + C); the FINAL chunk slides its
+        # window back to [L - C, L) — the overlap RE-feeds tokens whose
+        # K/V is already paged in, rewriting identical bytes (K/V depend
+        # only on token and position), so one jitted (Bc, C) executable
+        # serves every chunk round
+        chunk_x = chunk_tables = chunk_pos = None
+        chunk_meta: List[Tuple[Request, int]] = []   # (req, window_end)
+        if chunkers:
             eng._ensure_aux(self.ledger, self.events, t0)
             emb = eng._resident["embed"]
-            for req in admitted:
+            self._ensure_chunk_pools()
+            c = self.chunk
+            rows, starts = [], []
+            for r in chunkers:
+                n = len(r.tokens)
+                w0 = min(r.prefill_pos, n - c)
+                rows.append(r.tokens[w0:w0 + c])
+                starts.append(w0)
+                chunk_meta.append((r, w0 + c))
+            chunk_x = fns["embed"](
+                emb, jnp.asarray(np.asarray(rows, np.int32)))
+            chunk_pos = jnp.asarray(starts, jnp.int32)
+            tb = np.zeros((len(chunkers), self._nb), np.int32)
+            for i, r in enumerate(chunkers):
+                tb[i, :len(r.table.pages)] = r.table.pages
+            chunk_tables = jnp.asarray(tb)
+            self._chunk_jobs += len(chunkers)
+        # ---- build prefill jobs for this boundary's admissions
+        pre_xs = []
+        if pre_admits:
+            eng._ensure_aux(self.ledger, self.events, t0)
+            emb = eng._resident["embed"]
+            for req in pre_admits:
                 toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
                 pre_xs.append(fns["embed"](emb, toks))
 
+        chunk_out = None
         if self.page_size:
             # stacked block tables, padded with page 0 (masked slots)
             dec_tables = None
             if dec_x is not None:
-                tb = np.zeros((len(self.inflight), self._nb), np.int32)
-                for i, r in enumerate(self.inflight):
+                tb = np.zeros((len(decoders), self._nb), np.int32)
+                for i, r in enumerate(decoders):
                     tb[i, :len(r.table.pages)] = r.table.pages
                 dec_tables = jnp.asarray(tb)
-            dec_x, pools, pre_outs, pre_caches = eng.run_batch_round(
-                self.ledger, self.events, t0,
-                decode_x=dec_x,
-                decode_pos=dec_pos,
-                prefill_xs=pre_xs,
-                prefill_total=self._nb * self.page_size,
-                paged_pools=(self._pools if dec_x is not None else None),
-                decode_tables=dec_tables)
-            if dec_x is not None:
+            paged_work = dec_x is not None or chunk_x is not None
+            dec_x, pools, pre_outs, pre_caches, chunk_out = \
+                eng.run_batch_round(
+                    self.ledger, self.events, t0,
+                    decode_x=dec_x,
+                    decode_pos=dec_pos,
+                    prefill_xs=pre_xs,
+                    prefill_total=self._nb * self.page_size,
+                    paged_pools=(self._pools if paged_work else None),
+                    decode_tables=dec_tables,
+                    chunk_x=chunk_x,
+                    chunk_tables=chunk_tables,
+                    chunk_pos=chunk_pos)
+            if paged_work:
                 self._pools = pools
-            self._scatter_prefills(admitted, pre_caches)
+            self._scatter_prefills(pre_admits, pre_caches)
         else:
-            dec_x, caches, pre_outs, pre_caches = eng.run_batch_round(
+            dec_x, caches, pre_outs, pre_caches, _ = eng.run_batch_round(
                 self.ledger, self.events, t0,
                 decode_x=dec_x,
                 decode_caches=self._caches,
@@ -781,7 +1126,7 @@ class BatchScheduler:
             logits = fns["head_all"](head, dec_x)              # (R, W, V)
             greedy = np.asarray(jnp.argmax(logits, -1))        # (R, W)
             self._spec_rounds += 1
-            for row, req in enumerate(self.inflight):
+            for row, req in enumerate(decoders):
                 prop = props[row]
                 a = 0
                 while a < len(prop) and prop[a] == int(greedy[row, a]):
@@ -808,11 +1153,27 @@ class BatchScheduler:
         elif dec_x is not None:
             logits = fns["head"](head, dec_x)                  # (R, V)
             nxt = np.asarray(jnp.argmax(logits, -1))
-            for row, req in enumerate(self.inflight):
+            for row, req in enumerate(decoders):
                 req.tokens.append(int(nxt[row]))
                 req.generated += 1
-        for i, req in enumerate(admitted):
+        if chunk_out is not None:
+            # head reads the window's LAST column — only meaningful for
+            # a FINAL chunk, whose last column sits at the prompt's last
+            # token; non-final rows just advance their chunk cursor
+            logits = fns["head"](head, chunk_out)              # (Bc, V)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for i, (req, end) in enumerate(chunk_meta):
+                if end >= len(req.tokens):       # final chunk: sample
+                    req.prefilling = False
+                    req.prefill_pos = len(req.tokens)
+                    self._first_token(req)
+                    req.tokens.append(int(nxt[i]))
+                    req.generated += 1
+                else:
+                    req.prefill_pos = end
+        for i, req in enumerate(pre_admits):
             logits = fns["head"](head, pre_outs[i])            # (1, V)
+            self._first_token(req)
             req.tokens.append(int(jnp.argmax(logits, -1)[0]))
             req.generated += 1           # re-prefills resume, not reset
         if self.spec_depth and admitted:
@@ -887,8 +1248,70 @@ class BatchScheduler:
             new_tokens=sum(r.generated for r in self.done.values()),
             requests=len(self.done), max_inflight_seen=self._max_seen,
             cache_bytes_peak=cache_peak, events=self.events,
-            seed=self.seed, **paged_kw, **expert_kw, **spec_kw)
+            seed=self.seed, **paged_kw, **expert_kw, **spec_kw,
+            **self._slo_stats())
         return outs, stats
+
+    # ---- serving-tier accounting -------------------------------------
+    def _req_slo(self, req: Request
+                 ) -> Tuple[Optional[float], Optional[float], bool]:
+        """(ttft_rounds, tpot_rounds, meets_slo) for one finished
+        request.  TTFT counts from the ORIGINAL arrival (born_round —
+        preemption re-queues mutate arrival_round); TPOT averages the
+        rounds per token after the first."""
+        if req.rejected or req.first_token_round < 0:
+            return None, None, False
+        ttft = float(req.first_token_round - req.born_round + 1)
+        tpot = (float(req.finished_round - req.first_token_round)
+                / (req.generated - 1) if req.generated > 1 else 0.0)
+        ok = True
+        if self.slo is not None:
+            if (self.slo.ttft_rounds is not None
+                    and ttft > self.slo.ttft_rounds):
+                ok = False
+            if (self.slo.tpot_rounds is not None
+                    and tpot > self.slo.tpot_rounds):
+                ok = False
+        return ttft, tpot, ok
+
+    def _slo_stats(self) -> Dict:
+        """Serving-tier ServeStats fields: round-based TTFT/TPOT
+        percentiles (deterministic under a fixed trace), their
+        wall-clock mirrors, and goodput-under-SLO."""
+        reqs = list(self.done.values())
+        ttfts, tpots, good_tokens, attained = [], [], 0, 0
+        ttfts_s, tpots_s = [], []
+        for r in reqs:
+            ttft, tpot, ok = self._req_slo(r)
+            if ttft is not None:
+                ttfts.append(ttft)
+                tpots.append(tpot)
+                if r.t_first >= 0 and r.t_arrival >= 0:
+                    ttfts_s.append(r.t_first - r.t_arrival)
+                if r.generated > 1 and r.t_done >= 0 and r.t_first >= 0:
+                    tpots_s.append((r.t_done - r.t_first)
+                                   / (r.generated - 1))
+            if ok:
+                attained += 1
+                good_tokens += r.generated
+
+        def pct(xs, q):
+            return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+        return dict(
+            tenants=len({r.tenant for r in reqs}) if reqs else 0,
+            chunk_size=self.chunk,
+            chunk_jobs=self._chunk_jobs,
+            ttft_p50_rounds=pct(ttfts, 50),
+            ttft_p99_rounds=pct(ttfts, 99),
+            tpot_p50_rounds=pct(tpots, 50),
+            tpot_p99_rounds=pct(tpots, 99),
+            ttft_p50_s=pct(ttfts_s, 50), ttft_p99_s=pct(ttfts_s, 99),
+            tpot_p50_s=pct(tpots_s, 50), tpot_p99_s=pct(tpots_s, 99),
+            slo_attained=(attained / len(reqs)) if reqs else 1.0,
+            goodput_tokens=good_tokens,
+            slo_rejections=self.slo_rejections,
+            policy=list(self.policy_log))
 
     # ------------------------------------------------------------------
     def warmup(self, prompt_lens=()) -> "BatchScheduler":
@@ -930,6 +1353,19 @@ class BatchScheduler:
                     dr, _ = fns["layer_decode_paged"](
                         w0, xr, pool1, tbr, jnp.zeros((r,), jnp.int32))
                     fns["head"](head, dr).block_until_ready()
+                if self.chunk:
+                    # chunked prefill rides (r, C) verify windows
+                    xc = fns["embed"](emb,
+                                      jnp.zeros((r, self.chunk), jnp.int32))
+                    dc, _ = fns["layer_verify_paged"](
+                        w0, xc, pool1, tbr, jnp.zeros((r,), jnp.int32))
+                    fns["head"](head, dc).block_until_ready()
+            if self.chunk:
+                # chunk rounds write straight into the pools — create
+                # them now so a cold chunked admission needs no extra
+                # layer load (see _ensure_chunk_pools)
+                self._ensure_pool_arrays(
+                    {name: c1 for name in eng.layer_names})
             if self.spec_depth:
                 for s in sorted(set(int(p) for p in prompt_lens)):
                     self.draft.prefill(jnp.zeros((1, s), jnp.int32),

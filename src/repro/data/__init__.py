@@ -1,1 +1,4 @@
 from repro.data.synthetic import make_batch, batch_iterator  # noqa: F401
+from repro.data.traces import (TraceRequest, load_trace,  # noqa: F401
+                               make_trace, save_trace, submit_trace,
+                               tenant_prefix, trace_max_len)

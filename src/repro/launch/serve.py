@@ -45,6 +45,23 @@ target's vocabulary; greedy outputs are token-identical to
 non-speculative serving.  ``--spec-depth 0`` (the default with a draft)
 lets the planner search depth jointly with the rest of the schedule.
 
+The SERVING TIER (multi-tenant SLO mode): ``--tenants N`` replays the
+seeded heavy-tailed multi-tenant trace from ``repro.data.traces`` —
+Zipf tenant mix, lognormal prompt lengths, priority classes 0..2 whose
+high-priority arrivals may PREEMPT the lowest-priority/youngest
+in-flight request — and ``--trace FILE`` replays a saved JSON trace
+verbatim (``repro.data.traces.save_trace``) for exact cross-machine
+reproduction.  ``--chunk-prefill C`` (needs ``--page-size``) splits
+prompts longer than C into page-aligned chunks joined into decode
+rounds, so a long prompt no longer stalls every in-flight decode for a
+full weight stream; outputs stay token-identical.  ``--slo-ttft-ms`` /
+``--slo-tpot-ms`` feed the planner's SLO gate (capacity-first search
+stops at the largest in-flight count predicted to MEET the targets)
+and arm the scheduler's rounds-based SLO accounting — the summary
+reports p50/p99 TTFT/TPOT and goodput-under-SLO; ``--slo-shed``
+additionally rejects requests at admission once their best-case TTFT
+is already blown.
+
 MoE architectures (e.g. ``--arch qwen3_moe_30b_a3b``) are partitioned
 expert-split and served through the expert-streaming subsystem
 (core/expert_stream.py): attention+router shards stream eagerly, the
@@ -64,7 +81,9 @@ import numpy as np
 
 from repro.checkpoint import partition_and_save
 from repro.configs import get, names
-from repro.core import BatchScheduler, Hermes
+from repro.core import SLO, BatchScheduler, Hermes
+from repro.data.traces import (load_trace, make_trace, submit_trace,
+                               trace_max_len)
 from repro.models.api import build_model
 
 CKPT_ROOT = Path("/tmp/repro_ckpts")
@@ -99,11 +118,25 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         quant: str = "fp32", page_size: int = 0,
         prefix_cache: bool = True, shared_prefix: int = 0,
         draft_arch: str | None = None, spec_depth: int = 0,
-        autotune: bool = False):
+        autotune: bool = False, trace: str | None = None,
+        tenants: int = 0, chunk_prefill: int = 0,
+        slo_ttft_ms: float | None = None, slo_tpot_ms: float | None = None,
+        slo_shed: bool = False):
     assert quant in QUANT_CHOICES, quant
     cfg = get(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
+    if chunk_prefill and not page_size:
+        raise SystemExit("error: --chunk-prefill needs --page-size "
+                         "(chunk rounds write through the paged KV "
+                         "kernel)")
+    if chunk_prefill and draft_arch:
+        raise SystemExit("error: --chunk-prefill is incompatible with "
+                         "--draft-arch (speculative rounds own the "
+                         "verify window)")
+    if (trace or tenants) and not kv_cache:
+        raise SystemExit("error: --trace/--tenants need the KV-cache "
+                         "scheduler; drop --no-kv-cache")
     ckpt = ensure_checkpoint(cfg)
     hermes = Hermes(ckpt, cfg)
     draft = None
@@ -137,6 +170,21 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         # shared-system-prompt trace: every request opens with the same
         # tokens (what the prefix tree maps once across the fleet)
         prompts[:, :shared_prefix] = prompts[0, :shared_prefix]
+    serve_trace = None
+    if trace:
+        serve_trace = load_trace(trace)
+    elif tenants:
+        # seeded heavy-tailed multi-tenant mix: prompt_len/new_tokens
+        # bound the distributions so the planned reservation still fits
+        serve_trace = make_trace(
+            requests, tenants=tenants, seed=seed, vocab=cfg.vocab_size,
+            arrival_rate=arrival_rate or 1.0,
+            prompt_mean=max(prompt_len // 2, 4), max_prompt=prompt_len,
+            new_mean=max(new_tokens // 2, 1), max_new=new_tokens,
+            prefix_len=shared_prefix, share_prefix=0.6)
+    total_len = prompt_len + new_tokens
+    if serve_trace:
+        total_len = max(total_len, trace_max_len(serve_trace))
 
     if not kv_cache:
         # paper's engine (§V-B2): sequential re-prefill, one weight
@@ -181,6 +229,11 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                              # private — don't let the plan assume hits
                              shared_prefix_len=(shared_prefix
                                                 if prefix_cache else 0),
+                             slo_ttft_s=(slo_ttft_ms / 1e3
+                                         if slo_ttft_ms else None),
+                             slo_tpot_s=(slo_tpot_ms / 1e3
+                                         if slo_tpot_ms else None),
+                             chunk_prefill=chunk_prefill,
                              **spec_kw)[0]
     if not g.feasible:
         raise SystemExit(
@@ -203,8 +256,15 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"(cache {g.cache_bytes/2**20:.1f}MB"
           + (f", page size {g.page_size}" if g.page_size else "")
           + (f", spec depth {depth}" if depth else "")
+          + (f", chunk {chunk_prefill}" if chunk_prefill else "")
           + (f", expert cache {g.expert_cache_bytes/2**20:.1f}MB"
              if g.expert_cache_bytes else "") + ")")
+    if (slo_ttft_ms or slo_tpot_ms):
+        print(f"planner(slo): predicted ttft {g.predicted_ttft_s*1e3:.0f}ms"
+              f" / tpot {g.predicted_tpot_s*1e3:.1f}ms -> "
+              f"{'MEETS' if g.slo_ok else 'MISSES'} the target"
+              + ("" if g.slo_ok else " (serving degraded: no feasible "
+                 "schedule attains it)"))
 
     if autotune:
         # per-device kernel tiles for the planner's winning (dtype, page
@@ -222,16 +282,34 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                         num_agents=agents, pin_window=pin,
                         expert_cache_bytes=g.expert_cache_bytes or None,
                         page_size=g.page_size or None)
+    slo = None
+    if slo_ttft_ms or slo_tpot_ms:
+        # seconds targets -> the scheduler's deterministic rounds clock,
+        # via the planned round latency (same conversion as the facade)
+        rl = g.predicted_per_token_s
+        if rl and rl > 0 and np.isfinite(rl):
+            slo = SLO(ttft_rounds=(max(int(slo_ttft_ms / 1e3 / rl), 1)
+                                   if slo_ttft_ms else None),
+                      tpot_rounds=((slo_tpot_ms / 1e3 / rl)
+                                   if slo_tpot_ms else None),
+                      shed=slo_shed)
     sched = BatchScheduler(eng, max_inflight=g.inflight,
-                           max_total_len=prompt_len + new_tokens,
+                           max_total_len=total_len,
                            prefix_cache=prefix_cache, seed=seed,
                            draft=(draft if depth else None),
-                           spec_depth=depth)
+                           spec_depth=depth,
+                           chunk_prefill=(chunk_prefill
+                                          if g.page_size else 0),
+                           slo=slo)
     try:
         sched.warmup(prompt_lens=[prompt_len])
-        arrivals = poisson_arrivals(requests, arrival_rate, rng)
-        for i in range(requests):
-            sched.submit(prompts[i], new_tokens, arrival_round=arrivals[i])
+        if serve_trace is not None:
+            submit_trace(sched, serve_trace)
+        else:
+            arrivals = poisson_arrivals(requests, arrival_rate, rng)
+            for i in range(requests):
+                sched.submit(prompts[i], new_tokens,
+                             arrival_round=arrivals[i])
         t0 = time.time()
         outs, stats = sched.run()
         dt = time.time() - t0
@@ -255,6 +333,19 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"{stats.prefix_hit_pages} prefix-hit pages, "
               f"{stats.cow_copies} COW copies, "
               f"{stats.preemptions} preemptions")
+    if stats.chunk_size:
+        print(f"  chunked prefill: {stats.chunk_size}-token chunks, "
+              f"{stats.chunk_jobs} chunk jobs joined into decode rounds")
+    if serve_trace is not None or slo is not None:
+        print(f"  slo: ttft p50/p99 {stats.ttft_p50_rounds:.1f}/"
+              f"{stats.ttft_p99_rounds:.1f} rounds, tpot p50/p99 "
+              f"{stats.tpot_p50_rounds:.2f}/{stats.tpot_p99_rounds:.2f} "
+              f"rounds/token, attained {stats.slo_attained:.0%}, goodput "
+              f"{stats.goodput_tokens} tokens "
+              f"({stats.goodput_tokens_per_s:.1f} tok/s), "
+              f"{stats.slo_rejections} shed, "
+              f"{stats.preemptions} preemptions, "
+              f"{stats.tenants} tenant(s)")
     if stats.spec_depth:
         print(f"  speculative: depth {stats.spec_depth}, "
               f"{stats.spec_rounds} verify rounds, "
@@ -268,8 +359,12 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"(layer, expert) activations/round, cache "
               f"{stats.expert_cache_bytes/2**20:.1f}MB")
     for rid, req in sorted(sched.done.items()):
-        print(f"  req{rid}: arrived r{req.arrival_round} admitted "
-              f"r{req.admitted_round} finished r{req.finished_round}")
+        tag = (f" [{req.tenant} p{req.priority}]"
+               if serve_trace is not None else "")
+        state = ("SHED" if req.rejected else
+                 f"admitted r{req.admitted_round} finished "
+                 f"r{req.finished_round}")
+        print(f"  req{rid}{tag}: arrived r{req.born_round} {state}")
     sched.close()
     return outs, stats
 
@@ -322,6 +417,29 @@ def main():
                     help="per-device kernel tile/impl autotune for the "
                     "planner's winning (dtype, page size), cached to "
                     "disk (kernels/autotune.py)")
+    ap.add_argument("--trace", default=None,
+                    help="replay a saved multi-tenant JSON trace "
+                    "(repro.data.traces.save_trace) verbatim")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="generate a seeded heavy-tailed multi-tenant "
+                    "trace with N tenants (Zipf mix, priority classes, "
+                    "per-tenant prefix namespaces)")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="split prompts longer than C tokens into "
+                    "page-aligned chunks joined into decode rounds "
+                    "(needs --page-size; token-identical to monolithic "
+                    "prefill)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="time-to-first-token target fed to the "
+                    "planner's SLO gate and the scheduler's rounds-based "
+                    "accounting")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="time-per-output-token target (same SLO "
+                    "machinery as --slo-ttft-ms)")
+    ap.add_argument("--slo-shed", action="store_true",
+                    help="reject requests at admission once their "
+                    "best-case TTFT already busts the --slo-ttft-ms "
+                    "target")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -333,7 +451,9 @@ def main():
         prefix_cache=not args.no_prefix_cache,
         shared_prefix=args.shared_prefix,
         draft_arch=args.draft_arch, spec_depth=args.spec_depth,
-        autotune=args.autotune)
+        autotune=args.autotune, trace=args.trace, tenants=args.tenants,
+        chunk_prefill=args.chunk_prefill, slo_ttft_ms=args.slo_ttft_ms,
+        slo_tpot_ms=args.slo_tpot_ms, slo_shed=args.slo_shed)
 
 
 if __name__ == "__main__":

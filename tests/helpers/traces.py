@@ -1,0 +1,21 @@
+"""Trace-replay fixture: the seeded multi-tenant serving traces.
+
+The generator itself lives in ``repro.data.traces`` so the CLI
+(``repro.launch.serve --trace/--tenants``) and the benchmark
+(``benchmarks/bench_serve_slo.py``) replay EXACTLY the workload the
+tests pin down — this module re-exports it for test imports and adds
+the tiny-checkpoint default used by the serve-SLO suite.
+"""
+from repro.data.traces import (TraceRequest, load_trace,  # noqa: F401
+                               make_trace, save_trace, submit_trace,
+                               tenant_prefix, trace_max_len)
+
+
+def tiny_trace(n_requests: int = 8, *, seed: int = 0, tenants: int = 2,
+               max_total: int = 26, prefix_len: int = 0):
+    """A trace sized for the 3-layer test checkpoint: prompts and
+    outputs bounded so ``len(prompt) + new <= max_total``."""
+    return make_trace(n_requests, tenants=tenants, seed=seed, vocab=300,
+                      arrival_rate=1.5, prompt_mean=8,
+                      max_prompt=max_total - 4, new_mean=2, max_new=4,
+                      prefix_len=prefix_len, share_prefix=0.5)

@@ -1,0 +1,276 @@
+"""Serving-tier (SLO/multi-tenant) suite: chunked prefill token
+identity, priority-preemption safety properties, tenant namespace
+isolation, SLO shedding, and the golden-trace policy regression.
+
+Property tests run under ``helpers.hypothesis_compat`` (real hypothesis
+when installed, deterministic smoke loop otherwise).  The golden test
+replays ``tests/helpers/traces.tiny_trace`` — the SAME generator the
+CLI and ``benchmarks/bench_serve_slo.py`` use — and pins the full
+admission/preemption/retire sequence; regenerate with
+``REPRO_UPDATE_GOLDEN=1 pytest tests/test_serve_slo.py -k golden``.
+"""
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import jax
+import pytest
+from helpers.hypothesis_compat import given, settings, st
+from helpers.traces import submit_trace, tiny_trace
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import BatchScheduler, PipeloadEngine
+from repro.core.scheduler import SLO
+from repro.models.api import build_model
+
+MAX_TOTAL = 26
+GOLDEN = Path(__file__).parent / "golden" / "serve_slo_trace.json"
+
+
+@pytest.fixture(scope="module")
+def tiny(tmp_path_factory):
+    """3-layer toy checkpoint (same geometry as the stress suite)."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300, vocab_pad_to=4, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "tiny"
+    api = build_model(cfg)
+    partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, path)
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    return cfg, path, layer_b, other
+
+
+def _sched(cfg, path, *, page_size=None, budget=None, **kw):
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget, page_size=page_size)
+    return BatchScheduler(eng, max_total_len=MAX_TOTAL,
+                          page_size=page_size, **kw)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill == monolithic prefill, token for token
+# ---------------------------------------------------------------------------
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       chunk=st.sampled_from([5, 8, 10]),
+       page=st.sampled_from([5, 8]))
+def test_chunked_prefill_token_identity(tiny, seed, chunk, page):
+    """Across chunk sizes x page sizes {5, 8}: splitting long prompts
+    into chunk-joined rounds must not change a single output token."""
+    cfg, path, _, _ = tiny
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(12, 21, 3).tolist()       # all exceed the chunk
+    news = [int(min(n, MAX_TOTAL - lens[i]))
+            for i, n in enumerate(rng.integers(2, 5, 3))]
+    prompts = [rng.integers(0, cfg.vocab_size, (s,)) for s in lens]
+    arrivals = rng.integers(0, 4, 3).tolist()
+
+    def run(c):
+        sched = _sched(cfg, path, page_size=page, max_inflight=3,
+                       chunk_prefill=c)
+        rids = [sched.submit(p, n, arrival_round=a)
+                for p, n, a in zip(prompts, news, arrivals)]
+        outs, stats = sched.run()
+        return [outs[r] for r in rids], stats
+
+    ref, s0 = run(0)
+    out, s1 = run(chunk)
+    assert s1.chunk_jobs > 0, "no prompt actually chunked"
+    assert s1.chunk_size % page == 0          # page-aligned rounding
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# priority preemption: safety properties under a tight budget
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       max_inflight=st.integers(1, 3),
+       cache_slots=st.integers(1, 2),
+       paged=st.booleans())
+def test_preemption_never_deadlocks_never_overruns(
+        tiny, seed, max_inflight, cache_slots, paged):
+    """Under priority traffic and a budget sized for ``cache_slots``
+    concurrent caches: the run always completes, the budget is never
+    exceeded, the ledger drains EXACTLY (the stress suite's property),
+    and every preempted request still retires with its full token
+    count — bounded priorities mean no starvation."""
+    cfg, path, layer_b, other = tiny
+    per_req = cfg.num_layers * cfg.cache_bytes(1, MAX_TOTAL)
+    budget = other + cache_slots * per_req + 2 * layer_b
+    trace = tiny_trace(6, seed=seed, max_total=MAX_TOTAL)
+    sched = _sched(cfg, path, page_size=(5 if paged else None),
+                   budget=budget, max_inflight=max_inflight)
+    rids = submit_trace(sched, trace)
+    outs, stats = sched.run()
+
+    # every request retires with exactly its requested tokens
+    assert stats.requests == len(trace)
+    for t in trace:
+        req = sched.done[rids[t.rid]]
+        assert req.generated == t.new_tokens
+        assert len(outs[rids[t.rid]]) == len(t.prompt) + t.new_tokens
+    # budget honoured through every preemption/re-admission
+    assert stats.peak_bytes <= budget
+    # exact drain: bytes released on preemption AND retirement match
+    assert not sched.inflight and not sched.queue
+    assert sched._cache_resident == 0
+    assert sched.ledger.resident == other
+    # every preempted request eventually retired (no starvation)
+    preempted = {rid for kind, rid, _ in stats.policy if kind == "preempt"}
+    for rid in preempted:
+        assert sched.done[rid].finished_round >= 0
+    # no runaway: serial service after the last arrival, plus one
+    # re-prefill's worth of rounds per preemption, bounds the run
+    horizon = (max(t.arrival_round for t in trace)
+               + sum(t.new_tokens for t in trace) + len(trace)
+               + len(preempted) * (MAX_TOTAL + 1) + 2)
+    assert stats.rounds <= horizon
+
+
+def test_priority_arrival_preempts_lowest_youngest(tiny):
+    """Deterministic bounce: a priority-2 arrival at a full scheduler
+    evicts the priority-0 in-flight request, serves first, and the
+    victim's re-prefilled continuation is token-identical to a solo
+    run."""
+    cfg, path, _, _ = tiny
+    rng = np.random.default_rng(7)
+    p_low = rng.integers(0, cfg.vocab_size, (10,))
+    p_high = rng.integers(0, cfg.vocab_size, (6,))
+
+    solo = _sched(cfg, path, page_size=5, max_inflight=1)
+    r = solo.submit(p_low, 8)
+    ref = solo.run()[0][r]
+
+    sched = _sched(cfg, path, page_size=5, max_inflight=1)
+    lo = sched.submit(p_low, 8, arrival_round=0, priority=0)
+    hi = sched.submit(p_high, 2, arrival_round=2, priority=2)
+    outs, stats = sched.run()
+
+    kinds = [(k, rid) for k, rid, _ in stats.policy]
+    assert ("preempt", lo) in kinds
+    assert stats.preemptions == 1
+    hi_req, lo_req = sched.done[hi], sched.done[lo]
+    assert hi_req.finished_round < lo_req.finished_round
+    # TTFT accounting survives the bounce: born_round is the original
+    # arrival even though the re-queue moved arrival_round forward
+    assert lo_req.born_round == 0 and lo_req.arrival_round > 0
+    np.testing.assert_array_equal(outs[lo], ref)
+
+
+# ---------------------------------------------------------------------------
+# tenant namespaces: share within, never across
+# ---------------------------------------------------------------------------
+def test_tenant_namespaces_isolate_identical_prompts(tiny):
+    """Two tenants submit the SAME system prompt: pages share within
+    each tenant but never across the boundary, and one tenant's
+    retirement never frees the other's pages (outputs stay exact)."""
+    cfg, path, _, _ = tiny
+    rng = np.random.default_rng(11)
+    system = rng.integers(0, cfg.vocab_size, (10,))   # two full pages @5
+    tails = [rng.integers(0, cfg.vocab_size, (4,)) for _ in range(4)]
+    prompts = [np.concatenate([system, t]) for t in tails]
+    news = [2, 6, 2, 6]        # t0's requests retire while t1 decodes
+
+    def run(**kw):
+        sched = _sched(cfg, path, page_size=5, max_inflight=4, **kw)
+        rids = [sched.submit(p, n, tenant=f"t{i % 2}")
+                for i, (p, n) in enumerate(zip(prompts, news))]
+        outs, stats = sched.run()
+        return sched, [outs[r] for r in rids], stats
+
+    ref_sched, ref, _ = run(prefix_cache=False)
+    sched, out, stats = run()
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+    # each tenant's SECOND request hits its own tenant's two prefix
+    # pages; a cross-tenant hit would double the count
+    assert sched.tree is not None
+    assert sched.tree.hits_by_tenant() == {"t0": 2, "t1": 2}
+    assert stats.prefix_hit_pages == 4
+    # sharing stayed within tenants: exactly one 2-page prefix dedup per
+    # tenant, so 4 fewer allocs than the no-sharing run — a cross-tenant
+    # share would save more, no sharing would save none
+    assert (ref_sched.pool.stats.allocs - sched.pool.stats.allocs == 4)
+    assert sched.pool.stats.shares == 4
+
+
+# ---------------------------------------------------------------------------
+# SLO shedding
+# ---------------------------------------------------------------------------
+def test_slo_shed_rejects_stale_admissions(tiny):
+    """With ``SLO(shed=True)`` a burst beyond the concurrency the TTFT
+    target allows is rejected at admission — rejected requests never
+    produce tokens, everyone else completes in full."""
+    cfg, path, _, _ = tiny
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, (8,)) for _ in range(5)]
+    sched = _sched(cfg, path, page_size=5, max_inflight=1,
+                   slo=SLO(ttft_rounds=3, shed=True))
+    rids = [sched.submit(p, 4) for p in prompts]
+    outs, stats = sched.run()
+
+    shed = [r for r in rids if sched.done[r].rejected]
+    served = [r for r in rids if not sched.done[r].rejected]
+    assert stats.slo_rejections == len(shed) > 0
+    assert len(served) >= 1
+    for r in served:
+        assert sched.done[r].generated == 4
+    for r in shed:
+        assert sched.done[r].generated == 0
+        assert len(outs[r]) == 0       # never admitted, nothing produced
+    rejects = [rid for k, rid, _ in stats.policy if k == "reject"]
+    assert sorted(rejects) == sorted(shed)
+
+
+# ---------------------------------------------------------------------------
+# golden trace: the policy sequence is pinned, drift is a readable diff
+# ---------------------------------------------------------------------------
+def test_golden_trace_policy_sequence(tiny):
+    """One seeded multi-tenant trace through the full tier (priorities +
+    chunked prefill + per-tenant prefixes, slot-bound so the policy is
+    purely combinatorial): the admission/preemption/retire sequence and
+    the final ServeStats headline are pinned in tests/golden/."""
+    cfg, path, _, _ = tiny
+    trace = tiny_trace(8, seed=42, tenants=2, max_total=MAX_TOTAL,
+                       prefix_len=5)
+    sched = _sched(cfg, path, page_size=5, max_inflight=2,
+                   chunk_prefill=10, slo=SLO(ttft_rounds=30))
+    rids = submit_trace(sched, trace)
+    _, stats = sched.run()
+
+    got = {
+        "policy": [[k, rid, rnd] for k, rid, rnd in stats.policy],
+        "requests": {
+            str(t.rid): {
+                "tenant": t.tenant, "priority": t.priority,
+                "born": sched.done[rids[t.rid]].born_round,
+                "admitted": sched.done[rids[t.rid]].admitted_round,
+                "finished": sched.done[rids[t.rid]].finished_round,
+                "generated": sched.done[rids[t.rid]].generated,
+            } for t in trace},
+        "stats": {
+            "rounds": stats.rounds,
+            "preemptions": stats.preemptions,
+            "slo_rejections": stats.slo_rejections,
+            "chunk_jobs": stats.chunk_jobs,
+            "prefix_hit_pages": stats.prefix_hit_pages,
+            "goodput_tokens": stats.goodput_tokens,
+            "ttft_p99_rounds": stats.ttft_p99_rounds,
+            "tenants": stats.tenants,
+        },
+    }
+    if os.environ.get("REPRO_UPDATE_GOLDEN"):
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True))
+        pytest.skip("golden file regenerated")
+    want = json.loads(GOLDEN.read_text())
+    assert got == want, (
+        "serving policy drifted from tests/golden/serve_slo_trace.json "
+        "(intentional? REPRO_UPDATE_GOLDEN=1 to re-pin)")
