@@ -71,6 +71,52 @@ def roofline_table(rows):
     return "\n".join(out)
 
 
+# ===========================================================================
+# Planner drift report (predicted vs measured serving outcomes)
+# ===========================================================================
+def drift_report(plan_entry, serve_stats) -> dict:
+    """Compare the winning plan's predictions against a serve run's
+    measurements — the feedback signal planner changes are judged by.
+
+    Duck-typed on attribute names (a ``GenPlanEntry`` and a
+    ``ServeStats``, but anything carrying the fields works), so this
+    module stays import-light.  Returns ``{"rows": [...]}`` where each
+    row has ``metric`` / ``predicted`` / ``measured`` / ``ratio``
+    (measured ÷ predicted; None when the prediction is zero or absent:
+    no drift is computable)."""
+    pairs = [
+        ("ttft_s", "predicted_ttft_s", "ttft_p50_s"),
+        ("tpot_s", "predicted_tpot_s", "tpot_p50_s"),
+        ("throughput_tps", "predicted_throughput_tps", "tokens_per_s"),
+        ("peak_bytes", "predicted_peak_bytes", "peak_bytes"),
+    ]
+    rows = []
+    for metric, p_attr, m_attr in pairs:
+        pred = getattr(plan_entry, p_attr, None)
+        meas = getattr(serve_stats, m_attr, None)
+        ratio = (meas / pred) if pred and meas is not None else None
+        rows.append({"metric": metric, "predicted": pred,
+                     "measured": meas, "ratio": ratio})
+    return {"rows": rows}
+
+
+def format_drift(report: dict) -> str:
+    """Aligned text table for a ``drift_report`` result (serve.py prints
+    this at the end of a run)."""
+    lines = ["planner drift (predicted vs measured, ratio = meas/pred):",
+             f"  {'metric':<16} {'predicted':>12} {'measured':>12} "
+             f"{'ratio':>7}"]
+    for row in report["rows"]:
+        def num(v):
+            if v is None:
+                return "—"
+            return f"{v:,.0f}" if abs(v) >= 1000 else f"{v:.4g}"
+        ratio = "—" if row["ratio"] is None else f"{row['ratio']:.2f}x"
+        lines.append(f"  {row['metric']:<16} {num(row['predicted']):>12} "
+                     f"{num(row['measured']):>12} {ratio:>7}")
+    return "\n".join(lines)
+
+
 def main():
     rows = load_all()
     ok = [d for d in rows if d.get("status") == "ok"]

@@ -17,3 +17,10 @@ from repro.core.prefetch import (PrefetchFault,  # noqa: F401
 from repro.core.profiler import profile_model  # noqa: F401
 from repro.core.scheduler import (SLO, BatchScheduler,  # noqa: F401
                                   Request, ServeStats)
+# NOTE: the telemetry() accessor is deliberately NOT re-exported — it
+# would shadow the repro.core.telemetry SUBMODULE attribute and break
+# ``from repro.core import telemetry``; reach it via Hermes.telemetry()
+# or repro.core.telemetry.telemetry()
+from repro.core.telemetry import (MetricsRegistry, Telemetry,  # noqa: F401
+                                  Tracer, export_chrome_trace, get_tracer,
+                                  metrics)

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.partition import load_manifest, load_shard
+from repro.core import telemetry as _tele
 from repro.core.kv_pages import pages_for
 from repro.core.modules import build_module_fns
 from repro.core.prefetch import PrefetchRuntime
@@ -108,6 +109,10 @@ class RunStats:
     spec_rounds: int = 0           # draft-propose / verify rounds run
     draft_tokens: int = 0          # tokens the draft proposed
     accepted_tokens: int = 0       # proposals the target confirmed
+    # prefetch fault-injection outcomes (REPRO_PREFETCH_FAULT_RATE),
+    # wired from the telemetry metrics registry as per-run deltas
+    retries: int = 0               # transient load failures retried
+    faults_absorbed: int = 0       # injected faults hidden by retries
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -131,13 +136,27 @@ class RunStats:
 
 
 class _Ledger:
-    """Resident-bytes accounting + budget gate (Daemon Agent state)."""
+    """Resident-bytes accounting + budget gate (Daemon Agent state).
+
+    Telemetry: every acquire/release samples the resident total into the
+    ``ledger.resident_bytes`` gauge (always on — a few attribute stores)
+    and, when tracing is enabled, into the ``ledger_resident_bytes``
+    counter track the Chrome-trace exporter renders as a residency
+    timeline.  Both sites guard on ``tracer.enabled`` so the disabled
+    path adds no allocation."""
 
     def __init__(self, budget: Optional[int]):
         self.budget = budget
         self.resident = 0
         self.peak = 0
         self.cond = threading.Condition()
+        self._gauge = _tele.metrics().gauge("ledger.resident_bytes")
+
+    def _sample(self):
+        self._gauge.set(self.resident)
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.counter("ledger_resident_bytes", self.resident)
 
     def acquire(self, nbytes: int, stop_flag):
         """Loader-side: blocks while the budget would be exceeded
@@ -149,11 +168,27 @@ class _Ledger:
                     self.cond.wait(timeout=0.1)
             self.resident += nbytes
             self.peak = max(self.peak, self.resident)
+            self._sample()
 
     def release(self, nbytes: int):
         with self.cond:
             self.resident -= nbytes
+            self._sample()
             self.cond.notify_all()
+
+
+def _fault_snap() -> Tuple[int, ...]:
+    """Baseline of the prefetch fault counters (registry values)."""
+    return _tele.counter_values("prefetch.retries",
+                                "prefetch.faults_absorbed")
+
+
+def _fault_delta(snap: Tuple[int, ...]) -> dict:
+    """RunStats kwargs for faults absorbed since ``snap``."""
+    now = _tele.counter_values("prefetch.retries",
+                               "prefetch.faults_absorbed")
+    return {"retries": now[0] - snap[0],
+            "faults_absorbed": now[1] - snap[1]}
 
 
 class DraftModel:
@@ -390,11 +425,16 @@ class PipeloadEngine:
             ledger=ledger, preloaded=preloaded, events=events, t0=t0)
 
         # ---- Inference Agent (this thread): in-order inference queue
-        with stream:
+        tr = _tele.get_tracer()
+        with stream, tr.span("stream_round", layers=n):
             for k in range(n):
                 w = stream.wait(k)                   # S_comp(k)
                 t = time.perf_counter()
-                x = apply_fn(k, w, x)
+                if tr.enabled:
+                    with tr.span("compute", layer=names[k]):
+                        x = apply_fn(k, w, x)
+                else:
+                    x = apply_fn(k, w, x)
                 events.append((t - t0, "comp_start", names[k]))
                 events.append((time.perf_counter() - t0, "comp_end",
                                names[k]))
@@ -510,6 +550,7 @@ class PipeloadEngine:
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
         snap = self._expert_snap()
+        fsnap = _fault_snap()
         t0 = time.perf_counter()
         logits = self._forward_once(jnp.asarray(tokens), ledger, events, t0)
         logits.block_until_ready()
@@ -518,7 +559,8 @@ class PipeloadEngine:
                                 loads=sum(1 for e in events
                                           if e[1] == "load_end"),
                                 streamed_bytes=self._streamed(events),
-                                **self._expert_stats(snap))
+                                **self._expert_stats(snap),
+                                **_fault_delta(fsnap))
 
     def run_generate(self, tokens, new_tokens: int, *,
                      kv_cache: bool = False,
@@ -541,6 +583,7 @@ class PipeloadEngine:
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
         snap = self._expert_snap()
+        fsnap = _fault_snap()
         toks = jnp.asarray(tokens)
         t0 = time.perf_counter()
         prefill_s = 0.0
@@ -577,7 +620,8 @@ class PipeloadEngine:
                               streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
-                              **self._expert_stats(snap))
+                              **self._expert_stats(snap),
+                              **_fault_delta(fsnap))
 
     # ------------------------------------------------------------------
     def _generate_kv(self, tokens, new_tokens: int
@@ -590,6 +634,7 @@ class PipeloadEngine:
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
         snap = self._expert_snap()
+        fsnap = _fault_snap()
         toks = jnp.asarray(tokens)
         b, s0 = toks.shape
         total = s0 + new_tokens
@@ -721,7 +766,8 @@ class PipeloadEngine:
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
                               cache_bytes=mapped["bytes"], kv_cache=True,
-                              **self._expert_stats(snap))
+                              **self._expert_stats(snap),
+                              **_fault_delta(fsnap))
 
     # ------------------------------------------------------------------
     def _draft_model(self, spec: SpecConfig) -> DraftModel:
@@ -792,6 +838,7 @@ class PipeloadEngine:
 
         events: List[Tuple[float, str, str]] = []
         ledger = _Ledger(self.budget)
+        fsnap = _fault_snap()
         t0 = time.perf_counter()
         self._ensure_aux(ledger, events, t0)
         draft.pin(ledger)
@@ -845,6 +892,7 @@ class PipeloadEngine:
         prefill_s = time.perf_counter() - t0
 
         # ---- draft/verify rounds
+        tr = _tele.get_tracer()
         spec_rounds = draft_tokens = accepted = 0
         while generated < new_tokens:
             k_prop = min(depth, new_tokens - generated - 1)
@@ -852,17 +900,18 @@ class PipeloadEngine:
             # seen (<= 2 feeds after the first round), then chain k_prop
             # proposals off its own greedy picks
             logits_d = None
-            for t in toks[draft_pos:]:
-                logits_d, dcaches = draft.decode(t, dcaches, draft_pos)
-                draft_pos += 1
             props: List[int] = []
-            for j in range(k_prop):
-                nxt = int(jnp.argmax(logits_d, -1)[0])
-                props.append(nxt)
-                if j < k_prop - 1:
-                    logits_d, dcaches = draft.decode(nxt, dcaches,
-                                                     draft_pos)
+            with tr.span("draft_propose", depth=k_prop):
+                for t in toks[draft_pos:]:
+                    logits_d, dcaches = draft.decode(t, dcaches, draft_pos)
                     draft_pos += 1
+                for j in range(k_prop):
+                    nxt = int(jnp.argmax(logits_d, -1)[0])
+                    props.append(nxt)
+                    if j < k_prop - 1:
+                        logits_d, dcaches = draft.decode(nxt, dcaches,
+                                                         draft_pos)
+                        draft_pos += 1
             # 2. branch the block table copy-on-write and map the verify
             # window's write range [pos0, pos0 + w_r)
             pos0 = len(toks) - 1         # slot of the last committed token
@@ -898,6 +947,8 @@ class PipeloadEngine:
 
             events.append((time.perf_counter() - t0, "spec_round",
                            f"w={w_r}"))
+            if tr.enabled:
+                tr.instant("spec_verify", window=w_r)
             x = self._run_pipeline(x, ledger, events, t0,
                                    self.mode == "pipeload",
                                    apply_fn=verify_apply)
@@ -917,6 +968,8 @@ class PipeloadEngine:
             # rejected suffix pages unmap without copies — then commit
             # the branch as the new table
             br.rollback(pool, pages_for(pos0 + a + 1, ps))
+            if tr.enabled:
+                tr.instant("spec_rollback", accepted=a, proposed=k_prop)
             table.release_all(pool)
             table = br
             # draft-cache slots still agreeing with toks: everything it
@@ -942,7 +995,8 @@ class PipeloadEngine:
                              kv_cache=True, spec_depth=depth,
                              spec_rounds=spec_rounds,
                              draft_tokens=draft_tokens,
-                             accepted_tokens=accepted)
+                             accepted_tokens=accepted,
+                             **_fault_delta(fsnap))
 
     # ------------------------------------------------------------------
     # Continuous-batching rounds (core/scheduler.py drives these)

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.partition import load_shard
+from repro.core import telemetry as _tele
 from repro.core.prefetch import PrefetchRuntime
 from repro.models.config import ModelConfig
 
@@ -310,6 +311,7 @@ class ExpertStreamEngine:
         """Resolve the round's activated experts for one layer: cache
         hits skip the disk, misses stream in parallel on the worker
         pool.  Returns weight dicts aligned with ``ids``."""
+        tr = _tele.get_tracer()
         rows = self.rows[layer_name]
         locked = frozenset((layer_name, int(e)) for e in ids)
         out: Dict[int, dict] = {}
@@ -324,6 +326,22 @@ class ExpertStreamEngine:
             if missing:
                 need = sum(rows[e]["bytes"] for e in missing)
                 self._make_room(need, locked)
+        m = _tele.metrics()
+        m.counter("expert.hits").inc(len(ids) - len(missing))
+        m.counter("expert.misses").inc(len(missing))
+        if missing and tr.enabled:
+            with tr.span("expert_fetch", layer=layer_name,
+                         misses=len(missing)):
+                self._fetch_missing(layer_name, rows, missing, out)
+        elif missing:
+            self._fetch_missing(layer_name, rows, missing, out)
+        if self._rounds:
+            self._unique_total += len(locked - self._round_seen)
+            self._round_seen |= locked
+        return [out[int(e)] for e in ids]
+
+    def _fetch_missing(self, layer_name: str, rows, missing: List[int],
+                       out: Dict[int, dict]) -> None:
         if missing:
             futures = [(e, self._runtime.submit(self._load_one, rows[e]))
                        for e in missing]
@@ -351,10 +369,6 @@ class ExpertStreamEngine:
                 if duplicate and charge:
                     self._ledger.release(nbytes)     # drop our copy's charge
                 del w
-        if self._rounds:
-            self._unique_total += len(locked - self._round_seen)
-            self._round_seen |= locked
-        return [out[int(e)] for e in ids]
 
     def _make_room(self, need: int, locked: frozenset):
         """Evict LRU entries until ``need`` more bytes fit the cache's
@@ -379,6 +393,7 @@ class ExpertStreamEngine:
             if self._ledger is not None and not self._reserved_mode:
                 self._ledger.release(nbytes)
             self._event("expert_evict", f"{key[0]}#{key[1]}")
+            _tele.metrics().counter("expert.evictions").inc()
 
     # -- union + padding -------------------------------------------------
     def _union(self, top_ids) -> List[int]:

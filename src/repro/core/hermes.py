@@ -41,6 +41,15 @@ class Hermes:
         self._profile: Optional[Dict] = None
         self._variants: Dict[str, "Hermes"] = {}
 
+    # ---- Telemetry (core/telemetry.py) ---------------------------------
+    def telemetry(self):
+        """The process-wide telemetry handle: ``.enable()`` turns on span
+        tracing across every PIPELOAD subsystem, ``.metrics`` is the
+        always-on registry, ``.export_chrome_trace(path)`` writes a
+        Perfetto-loadable timeline of the runs since enable()."""
+        from repro.core.telemetry import telemetry
+        return telemetry()
+
     # ---- Layer Profiler ------------------------------------------------
     def profile(self, *, batch: int = 1, seq: int = 128,
                 force: bool = False) -> Dict:

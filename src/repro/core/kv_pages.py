@@ -42,6 +42,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core import telemetry as _tele
+
 
 def pages_for(tokens: int, page_size: int) -> int:
     """Number of pages covering ``tokens`` token slots."""
@@ -81,6 +83,17 @@ class PagePool:
         self.capacity = 0                   # high-water page count
         self.mapped_peak = 0                # high-water LIVE page count
         self.stats = PoolStats()
+        # registry counters cached once (reset() zeroes them in place)
+        m = _tele.metrics()
+        self._m_allocs = m.counter("pages.allocs")
+        self._m_frees = m.counter("pages.frees")
+        self._m_cow = m.counter("pages.cow_copies")
+
+    def _sample(self) -> None:
+        """Mapped-pages counter track (only when tracing is enabled)."""
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.counter("kv_mapped_pages", len(self._ref))
 
     # -- introspection ---------------------------------------------------
     @property
@@ -112,7 +125,9 @@ class PagePool:
             self.capacity += 1
         self._ref[pid] = 1
         self.stats.allocs += 1
+        self._m_allocs.inc()
         self.mapped_peak = max(self.mapped_peak, len(self._ref))
+        self._sample()
         if self.ledger is not None:
             self.ledger.acquire(self.page_bytes, lambda: False)
         return pid
@@ -138,6 +153,8 @@ class PagePool:
         del self._ref[pid]
         self._free.append(pid)
         self.stats.frees += 1
+        self._m_frees.inc()
+        self._sample()
         if self.ledger is not None:
             self.ledger.release(self.page_bytes)
         return True
@@ -351,6 +368,10 @@ class BlockTable:
         new = pool.alloc()
         pool.release(pid)        # sibling keeps it: never frees here
         pool.stats.cow_copies += 1
+        pool._m_cow.inc()
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.instant("page_cow", old=pid, new=new)
         self.pages[idx] = new
         if idx < self.n_shared:
             self.n_shared = idx

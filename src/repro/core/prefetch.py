@@ -46,6 +46,8 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.core import telemetry as _tele
+
 FAULT_RATE_ENV = "REPRO_PREFETCH_FAULT_RATE"
 FAULT_SEED_ENV = "REPRO_PREFETCH_FAULT_SEED"
 RETRIES_ENV = "REPRO_PREFETCH_RETRIES"
@@ -173,27 +175,46 @@ class PrefetchStream:
 
     # -- lifecycle: load + publish (worker side) ---------------------------
     def _work(self, job: _Job):
+        tr = _tele.get_tracer()
         try:
             if self._done.is_set():
                 return
-            if not self._acquire(job):
+            if tr.enabled:
+                with tr.span("shard_acquire", key=job.key,
+                             bytes=job.nbytes):
+                    ok = self._acquire(job)
+            else:
+                ok = self._acquire(job)
+            if not ok:
                 return
             w = None
             t_start = time.perf_counter()
+            absorbed = 0
             for attempt in range(self._retries + 1):
                 try:
                     self._runtime._maybe_fault(job.key)
                     t_start = time.perf_counter()
-                    w = self._load_fn(job.key)
+                    if tr.enabled:
+                        with tr.span("shard_load", key=job.key,
+                                     bytes=job.nbytes):
+                            w = self._load_fn(job.key)
+                    else:
+                        w = self._load_fn(job.key)
                     break
                 except Exception as e:  # noqa: BLE001 — transient I/O retry
                     if attempt < self._retries and not self._done.is_set():
+                        absorbed += 1
+                        self._runtime._m_retries.inc()
                         continue
                     self._release_job(job)
                     self._fail(e)
                     return
+            if absorbed:
+                self._runtime._m_faults.inc(absorbed)
             self._event("load_start", job.key, t_start)
             self._event("load_end", job.key, time.perf_counter())
+            if tr.enabled:
+                tr.instant("shard_publish", key=job.key, bytes=job.nbytes)
             with self._cond:
                 if self._done.is_set():
                     abort = True
@@ -241,6 +262,14 @@ class PrefetchStream:
 
     def _finalize_destroy(self, job: _Job, weights):
         """Drainer-side: free the weights and return the charge."""
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            with tr.span("shard_destroy", key=job.key, bytes=job.nbytes):
+                self._finalize_destroy_inner(job, weights)
+        else:
+            self._finalize_destroy_inner(job, weights)
+
+    def _finalize_destroy_inner(self, job: _Job, weights):
         del weights                                  # free device memory
         with self._cond:
             charged, job.charged = job.charged, False
@@ -315,6 +344,11 @@ class PrefetchRuntime:
         self._fault_rng = random.Random(int(seed) if seed is not None else 0)
         self.retries = (int(os.environ.get(RETRIES_ENV, "0") or 0)
                         if retries is None else int(retries))
+        # registry instruments, cached once (reset() zeroes them in place,
+        # so these stay wired across serve runs)
+        m = _tele.metrics()
+        self._m_retries = m.counter("prefetch.retries")
+        self._m_faults = m.counter("prefetch.faults_absorbed")
         self._lock = threading.Lock()
         self._pool: Optional[ThreadPoolExecutor] = None
         self._demand: Optional[ThreadPoolExecutor] = None

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.partition import load_manifest, load_shard
+from repro.core import telemetry as _tele
 from repro.core.modules import build_module_fns
 from repro.core.prefetch import PrefetchRuntime
 from repro.models.config import ModelConfig
@@ -47,8 +48,9 @@ def _timed_device_load(runtime: PrefetchRuntime, ckpt_dir, name: str):
     prefetch runtime (the same pool the Loading Agents use, so
     ``t_load`` measures the path serving actually takes)."""
     def _load():
-        w = jax.tree.map(jnp.asarray, load_shard(ckpt_dir, name))
-        jax.tree.map(lambda a: a.block_until_ready(), w)
+        with _tele.get_tracer().span("profile_load", shard=name):
+            w = jax.tree.map(jnp.asarray, load_shard(ckpt_dir, name))
+            jax.tree.map(lambda a: a.block_until_ready(), w)
         return w
     return runtime.timed_load(_load)
 
@@ -70,10 +72,11 @@ def profile_model(ckpt_dir, cfg: ModelConfig, *, batch: int = 1,
         es = ExpertStreamEngine(ckpt_dir, manifest, cfg, fns, workers=2,
                                 runtime=runtime)
     try:
-        return _profile_model(ckpt_dir, cfg, manifest, fns, tokens, runtime,
-                              es, repeats=repeats,
-                              expert_sample=expert_sample, batch=batch,
-                              seq=seq)
+        with _tele.get_tracer().span("profile_model", model=cfg.name):
+            return _profile_model(ckpt_dir, cfg, manifest, fns, tokens,
+                                  runtime, es, repeats=repeats,
+                                  expert_sample=expert_sample, batch=batch,
+                                  seq=seq)
     finally:
         if es is not None:
             es.close()

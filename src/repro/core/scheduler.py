@@ -127,6 +127,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry as _tele
 from repro.core.engine import DraftModel, PipeloadEngine, _Ledger
 from repro.core.kv_pages import (BlockTable, PagePool, PrefixNamespaces,
                                  pages_for)
@@ -241,11 +242,20 @@ class ServeStats:
     slo_attained: float = 1.0      # fraction of requests meeting the SLO
     goodput_tokens: int = 0        # tokens from requests meeting the SLO
     slo_rejections: int = 0        # requests shed at admission
-    # policy trace for golden-file regression tests: (kind, rid, round)
-    # for every admit / preempt / retire / reject decision, in order —
-    # deterministic under a fixed trace (no wall-clock terms)
-    policy: List[Tuple[str, int, int]] = dataclasses.field(
+    # policy trace for golden-file regression tests:
+    # (kind, rid, round, t_wall) for every admit / preempt / retire /
+    # reject decision, in order.  The first three fields are
+    # deterministic under a fixed trace (no wall-clock terms — golden
+    # tests pin only those); t_wall is the decision's wall-clock second
+    # since the session's _t0, the same timeline as ``events`` and the
+    # Request t_arrival/t_first/t_done marks, so policy decisions line
+    # up with trace spans (observability only)
+    policy: List[Tuple[str, int, int, float]] = dataclasses.field(
         default_factory=list)
+    # prefetch fault-injection outcomes (REPRO_PREFETCH_FAULT_RATE),
+    # wired from the telemetry metrics registry as per-session deltas
+    retries: int = 0
+    faults_absorbed: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -345,9 +355,20 @@ class BatchScheduler:
             self.chunk = -(-int(chunk_prefill) // ps) * ps
         self.slo = slo
         self.slo_rejections = 0
-        # (kind, rid, round) policy decisions — the golden-trace log
-        self.policy_log: List[Tuple[str, int, int]] = []
+        # (kind, rid, round, t_wall) policy decisions — the golden-trace
+        # log (golden tests pin the first three, deterministic fields;
+        # t_wall aligns each decision with the span-trace timeline)
+        self.policy_log: List[Tuple[str, int, int, float]] = []
         self._chunk_jobs = 0
+        # telemetry: registry counters cached once (reset() zeroes them
+        # in place) + the session baseline for the fault-counter deltas
+        m = _tele.metrics()
+        self._m_admits = m.counter("sched.admits")
+        self._m_preempts = m.counter("sched.preemptions")
+        self._m_retires = m.counter("sched.retires")
+        self._m_rejects = m.counter("sched.rejections")
+        self._fault_base = _tele.counter_values("prefetch.retries",
+                                                "prefetch.faults_absorbed")
         self.seed = seed
         self.queue: List[Request] = []   # by (-priority, arrival, rid)
         self.inflight: List[Request] = []
@@ -611,9 +632,13 @@ class BatchScheduler:
         self.queue.append(victim)
         self._sort_queue()
         self.preemptions += 1
-        self.events.append((time.perf_counter() - self._t0,
-                            "preempt", f"req{victim.rid}"))
-        self.policy_log.append(("preempt", victim.rid, self.round))
+        now = time.perf_counter() - self._t0
+        self.events.append((now, "preempt", f"req{victim.rid}"))
+        self.policy_log.append(("preempt", victim.rid, self.round, now))
+        self._m_preempts.inc()
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.instant("preempt", rid=victim.rid, round=self.round)
 
     def _victim(self, below: Optional[int] = None) -> Optional[Request]:
         """The preemption victim: lowest priority first, youngest
@@ -702,6 +727,10 @@ class BatchScheduler:
         # batched update per leaf
         cow = [(o, n) for r, o, n in cow if r in self.inflight]
         self.pool.stats.cow_copies += len(cow)   # copies actually made
+        self.pool._m_cow.inc(len(cow))
+        tr = _tele.get_tracer()
+        if tr.enabled and cow:
+            tr.instant("page_cow", copies=len(cow), round=self.round)
         if cow:
             old = jnp.asarray([o for o, _ in cow], jnp.int32)
             new = jnp.asarray([n for _, n in cow], jnp.int32)
@@ -790,9 +819,13 @@ class BatchScheduler:
         req.finished_round = self.round
         self.done[req.rid] = req
         self.slo_rejections += 1
-        self.events.append((time.perf_counter() - self._t0,
-                            "reject", f"req{req.rid}"))
-        self.policy_log.append(("reject", req.rid, self.round))
+        now = time.perf_counter() - self._t0
+        self.events.append((now, "reject", f"req{req.rid}"))
+        self.policy_log.append(("reject", req.rid, self.round, now))
+        self._m_rejects.inc()
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.instant("reject", rid=req.rid, round=self.round)
         return True
 
     def _reserve(self, req: Request, inflight_after: int) -> bool:
@@ -855,9 +888,13 @@ class BatchScheduler:
                 break
             self.queue.remove(req)
             req.admitted_round = self.round
-            self.events.append((time.perf_counter() - self._t0,
-                                "admit", f"req{req.rid}"))
-            self.policy_log.append(("admit", req.rid, self.round))
+            now = time.perf_counter() - self._t0
+            self.events.append((now, "admit", f"req{req.rid}"))
+            self.policy_log.append(("admit", req.rid, self.round, now))
+            self._m_admits.inc()
+            tr = _tele.get_tracer()
+            if tr.enabled:
+                tr.instant("admit", rid=req.rid, round=self.round)
             admitted.append(req)
         return admitted
 
@@ -879,7 +916,14 @@ class BatchScheduler:
             req.t_done = time.perf_counter() - self._t0
             self.done[req.rid] = req
             self.events.append((req.t_done, "retire", f"req{req.rid}"))
-            self.policy_log.append(("retire", req.rid, self.round))
+            # t_wall reuses the retirement mark already stamped on the
+            # Request, so the policy trace and t_done agree exactly
+            self.policy_log.append(("retire", req.rid, self.round,
+                                    req.t_done))
+            self._m_retires.inc()
+            tr = _tele.get_tracer()
+            if tr.enabled:
+                tr.instant("retire", rid=req.rid, round=self.round)
 
     def _drop_rows(self, keep: List[int]):
         if self._caches is None:
@@ -927,6 +971,14 @@ class BatchScheduler:
                 for name in stacks[0]}
 
     def _draft_propose(self) -> List[List[int]]:
+        tr = _tele.get_tracer()
+        if not tr.enabled:
+            return self._draft_propose_inner()
+        with tr.span("draft_propose", rows=len(self.inflight),
+                     depth=self.spec_depth):
+            return self._draft_propose_inner()
+
+    def _draft_propose_inner(self) -> List[List[int]]:
         """One stacked draft pass over every in-flight request: catch the
         draft cache up to the committed tokens, then chain ``spec_depth``
         greedy proposals per row.
@@ -1016,6 +1068,10 @@ class BatchScheduler:
         fns, t0 = eng.fns, self._t0
         self.events.append((time.perf_counter() - t0, "round",
                             str(self.round)))
+        tr = _tele.get_tracer()
+        if tr.enabled:
+            tr.instant("serve_round", round=self.round,
+                       inflight=len(self.inflight) + len(admitted))
         # serving-tier round shape: DECODERS advance one token through
         # the stacked decode batch; CHUNKERS (mid-chunked-prefill, plus
         # this boundary's long-prompt admissions) feed one C-token chunk
@@ -1074,6 +1130,10 @@ class BatchScheduler:
                 tb[i, :len(r.table.pages)] = r.table.pages
             chunk_tables = jnp.asarray(tb)
             self._chunk_jobs += len(chunkers)
+            if tr.enabled:
+                for (r, end) in chunk_meta:
+                    tr.instant("chunk_job", rid=r.rid, round=self.round,
+                               end=end)
         # ---- build prefill jobs for this boundary's admissions
         pre_xs = []
         if pre_admits:
@@ -1241,6 +1301,8 @@ class BatchScheduler:
         # mid-loop preemption freed again)
         cache_peak = (self.pool.mapped_peak_bytes if self.page_size
                       else self._cache_peak)
+        faults = _tele.counter_values("prefetch.retries",
+                                      "prefetch.faults_absorbed")
         stats = ServeStats(
             rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
             loads=sum(1 for e in self.events if e[1] == "load_end"),
@@ -1249,8 +1311,31 @@ class BatchScheduler:
             requests=len(self.done), max_inflight_seen=self._max_seen,
             cache_bytes_peak=cache_peak, events=self.events,
             seed=self.seed, **paged_kw, **expert_kw, **spec_kw,
+            retries=faults[0] - self._fault_base[0],
+            faults_absorbed=faults[1] - self._fault_base[1],
             **self._slo_stats())
+        self._record_metrics(stats)
         return outs, stats
+
+    def _record_metrics(self, stats: ServeStats) -> None:
+        """Publish the session's headline stats into the process-wide
+        metrics registry, so ``snapshot()`` (serve.py's summary table and
+        ``--metrics-out``) sees serving outcomes next to the live
+        counters the subsystems incremented along the way."""
+        m = _tele.metrics()
+        m.gauge("serve.rounds").set(stats.rounds)
+        m.gauge("serve.requests").set(stats.requests)
+        m.gauge("serve.new_tokens").set(stats.new_tokens)
+        m.gauge("serve.tokens_per_s").set(stats.tokens_per_s)
+        m.gauge("serve.streamed_bytes").set(stats.streamed_bytes)
+        m.gauge("serve.ledger_peak_bytes").set(stats.peak_bytes)
+        m.gauge("serve.cache_peak_bytes").set(stats.cache_bytes_peak)
+        if stats.expert_hits or stats.expert_misses:
+            m.gauge("serve.expert_hit_rate").set(stats.expert_hit_rate)
+        if stats.draft_tokens:
+            m.gauge("serve.acceptance_rate").set(stats.acceptance_rate)
+        if stats.page_size:
+            m.gauge("serve.prefix_hit_pages").set(stats.prefix_hit_pages)
 
     # ---- serving-tier accounting -------------------------------------
     def _req_slo(self, req: Request
@@ -1297,6 +1382,14 @@ class BatchScheduler:
 
         def pct(xs, q):
             return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+        # wall-clock latency histograms for the registry snapshot (the
+        # drift report and --metrics-out read these)
+        m = _tele.metrics()
+        for v in ttfts_s:
+            m.histogram("serve.ttft_s").observe(v)
+        for v in tpots_s:
+            m.histogram("serve.tpot_s").observe(v)
 
         return dict(
             tenants=len({r.tenant for r in reqs}) if reqs else 0,

@@ -73,15 +73,18 @@ unique-expert count.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from pathlib import Path
 
 import jax
 import numpy as np
 
+from repro.analysis.report import drift_report, format_drift
 from repro.checkpoint import partition_and_save
 from repro.configs import get, names
 from repro.core import SLO, BatchScheduler, Hermes
+from repro.core import telemetry as tele
 from repro.data.traces import (load_trace, make_trace, submit_trace,
                                trace_max_len)
 from repro.models.api import build_model
@@ -110,6 +113,19 @@ def poisson_arrivals(n: int, rate: float | None,
     return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
+def export_telemetry(trace_out: str | None, metrics_out: str | None):
+    """Write the run's Chrome trace / metrics-registry snapshot, if the
+    caller asked for them."""
+    if trace_out:
+        tele.export_chrome_trace(trace_out)
+        print(f"trace: wrote {trace_out} (load it in ui.perfetto.dev "
+              "or chrome://tracing)")
+    if metrics_out:
+        Path(metrics_out).write_text(
+            json.dumps(tele.metrics().snapshot(), indent=1))
+        print(f"metrics: wrote {metrics_out}")
+
+
 def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         prompt_len: int = 16, new_tokens: int = 8, reduced: bool = True,
         num_agents: int | None = None, pin_window: int | None = None,
@@ -121,8 +137,15 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         autotune: bool = False, trace: str | None = None,
         tenants: int = 0, chunk_prefill: int = 0,
         slo_ttft_ms: float | None = None, slo_tpot_ms: float | None = None,
-        slo_shed: bool = False):
+        slo_shed: bool = False, trace_out: str | None = None,
+        metrics_out: str | None = None):
     assert quant in QUANT_CHOICES, quant
+    # fresh telemetry per run: zero the registry IN PLACE (cached
+    # instruments stay wired) and install a recording tracer only when a
+    # timeline export was requested — tracing off costs nothing
+    tele.metrics().reset()
+    if trace_out:
+        tele.enable()
     cfg = get(arch)
     if reduced:
         cfg = cfg.reduced().with_(num_layers=8)
@@ -208,6 +231,10 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
               f"peak {stats.peak_bytes/2**20:.0f}MB, "
               f"{stats.loads} shard loads "
               f"({stats.streamed_bytes/2**20:.0f}MB streamed)")
+        if stats.retries or stats.faults_absorbed:
+            print(f"  prefetch faults: {stats.retries} retries, "
+                  f"{stats.faults_absorbed} loads recovered")
+        export_telemetry(trace_out, metrics_out)
         return out, stats
 
     spec_kw = {}
@@ -325,39 +352,57 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
           f"({stats.streamed_bytes/2**20:.0f}MB streamed), "
           f"max inflight seen {stats.max_inflight_seen}, "
           f"seed {stats.seed}")
+    # end-of-run summary: ONE metrics-snapshot table (stats stays the
+    # source of truth for the numbers) instead of per-subsystem prints
+    rows: dict[str, object] = {
+        "streamed_mb": f"{stats.streamed_bytes/2**20:.0f}",
+        "ledger_peak_mb": (f"{stats.peak_bytes/2**20:.0f}"
+                           + (f" / budget {budget_mb:.0f}"
+                              if budget_mb else "")),
+        "cache_peak_mb": f"{stats.cache_bytes_peak/2**20:.1f}",
+        "shard_loads": stats.loads,
+    }
+    if stats.retries or stats.faults_absorbed:
+        rows["prefetch_retries"] = stats.retries
+        rows["faults_absorbed"] = stats.faults_absorbed
     if stats.page_size:
-        print(f"  paged KV: page size {stats.page_size}, "
-              f"{stats.pages_allocated} page allocs "
-              f"({stats.page_reuses} from the free list, pool peak "
-              f"{stats.pool_pages_peak} pages), "
-              f"{stats.prefix_hit_pages} prefix-hit pages, "
-              f"{stats.cow_copies} COW copies, "
-              f"{stats.preemptions} preemptions")
+        rows["page_size"] = stats.page_size
+        rows["page_allocs"] = (f"{stats.pages_allocated} "
+                               f"({stats.page_reuses} from the free "
+                               f"list, pool peak {stats.pool_pages_peak})")
+        rows["prefix_hit_pages"] = stats.prefix_hit_pages
+        rows["cow_copies"] = stats.cow_copies
+        rows["preemptions"] = stats.preemptions
     if stats.chunk_size:
-        print(f"  chunked prefill: {stats.chunk_size}-token chunks, "
-              f"{stats.chunk_jobs} chunk jobs joined into decode rounds")
+        rows["chunk_prefill"] = (f"{stats.chunk_size}-token chunks, "
+                                 f"{stats.chunk_jobs} jobs joined into "
+                                 "decode rounds")
     if serve_trace is not None or slo is not None:
-        print(f"  slo: ttft p50/p99 {stats.ttft_p50_rounds:.1f}/"
-              f"{stats.ttft_p99_rounds:.1f} rounds, tpot p50/p99 "
-              f"{stats.tpot_p50_rounds:.2f}/{stats.tpot_p99_rounds:.2f} "
-              f"rounds/token, attained {stats.slo_attained:.0%}, goodput "
-              f"{stats.goodput_tokens} tokens "
-              f"({stats.goodput_tokens_per_s:.1f} tok/s), "
-              f"{stats.slo_rejections} shed, "
-              f"{stats.preemptions} preemptions, "
-              f"{stats.tenants} tenant(s)")
+        rows["ttft_p50_p99_rounds"] = (f"{stats.ttft_p50_rounds:.1f} / "
+                                       f"{stats.ttft_p99_rounds:.1f}")
+        rows["tpot_p50_p99_rounds"] = (f"{stats.tpot_p50_rounds:.2f} / "
+                                       f"{stats.tpot_p99_rounds:.2f}")
+        rows["slo_attained"] = f"{stats.slo_attained:.0%}"
+        rows["goodput_tokens"] = (f"{stats.goodput_tokens} "
+                                  f"({stats.goodput_tokens_per_s:.1f} "
+                                  "tok/s)")
+        rows["shed"] = stats.slo_rejections
+        rows["tenants"] = stats.tenants
     if stats.spec_depth:
-        print(f"  speculative: depth {stats.spec_depth}, "
-              f"{stats.spec_rounds} verify rounds, "
-              f"{stats.accepted_tokens}/{stats.draft_tokens} proposals "
-              f"accepted ({stats.acceptance_rate:.0%})")
+        rows["spec_depth"] = stats.spec_depth
+        rows["spec_accepted"] = (f"{stats.accepted_tokens}/"
+                                 f"{stats.draft_tokens} "
+                                 f"({stats.acceptance_rate:.0%}) over "
+                                 f"{stats.spec_rounds} verify rounds")
     if eng.expert is not None:
-        print(f"  expert stream: hit rate {stats.expert_hit_rate:.0%} "
-              f"({stats.expert_hits} hits / {stats.expert_misses} loads, "
-              f"{stats.expert_evictions} evictions), "
-              f"{stats.unique_experts_per_round:.1f} unique "
-              f"(layer, expert) activations/round, cache "
-              f"{stats.expert_cache_bytes/2**20:.1f}MB")
+        rows["expert_hit_rate"] = (f"{stats.expert_hit_rate:.0%} "
+                                   f"({stats.expert_hits} hits / "
+                                   f"{stats.expert_misses} loads, "
+                                   f"{stats.expert_evictions} evicted)")
+        rows["experts_per_round"] = f"{stats.unique_experts_per_round:.1f}"
+        rows["expert_cache_mb"] = f"{stats.expert_cache_bytes/2**20:.1f}"
+    print(tele.summary_table(rows, title="serve summary"))
+    print(format_drift(drift_report(g, stats)))
     for rid, req in sorted(sched.done.items()):
         tag = (f" [{req.tenant} p{req.priority}]"
                if serve_trace is not None else "")
@@ -366,6 +411,7 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
                  f"r{req.finished_round}")
         print(f"  req{rid}{tag}: arrived r{req.born_round} {state}")
     sched.close()
+    export_telemetry(trace_out, metrics_out)
     return outs, stats
 
 
@@ -440,6 +486,14 @@ def main():
                     help="reject requests at admission once their "
                     "best-case TTFT already busts the --slo-ttft-ms "
                     "target")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="enable the span tracer and write the run as "
+                    "Chrome trace-event JSON (open in ui.perfetto.dev: "
+                    "one track per loader thread, ledger-bytes counter "
+                    "track, scheduler policy instants)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the end-of-run metrics-registry "
+                    "snapshot (counters/gauges/histograms) as JSON")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     run(args.arch, budget_mb=args.budget_mb, requests=args.requests,
@@ -453,7 +507,8 @@ def main():
         draft_arch=args.draft_arch, spec_depth=args.spec_depth,
         autotune=args.autotune, trace=args.trace, tenants=args.tenants,
         chunk_prefill=args.chunk_prefill, slo_ttft_ms=args.slo_ttft_ms,
-        slo_tpot_ms=args.slo_tpot_ms, slo_shed=args.slo_shed)
+        slo_tpot_ms=args.slo_tpot_ms, slo_shed=args.slo_shed,
+        trace_out=args.trace_out, metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

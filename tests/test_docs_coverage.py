@@ -35,3 +35,13 @@ def test_every_serve_flag_documented():
     assert not missing, (
         f"launch/serve.py flags undocumented (README.md or docs/): "
         f"{missing}")
+
+
+def test_telemetry_flags_documented_in_observability_doc():
+    """The telemetry flags get more than the corpus-wide mention: the
+    observability guide itself must cover both exports."""
+    doc = (REPO / "docs" / "observability.md").read_text()
+    for flag in ("--trace-out", "--metrics-out"):
+        assert f"`{flag}" in doc, (
+            f"{flag} missing from docs/observability.md")
+    assert "ui.perfetto.dev" in doc

@@ -122,7 +122,8 @@ def test_preemption_never_deadlocks_never_overruns(
     assert sched._cache_resident == 0
     assert sched.ledger.resident == other
     # every preempted request eventually retired (no starvation)
-    preempted = {rid for kind, rid, _ in stats.policy if kind == "preempt"}
+    preempted = {rid for kind, rid, _, _ in stats.policy
+                 if kind == "preempt"}
     for rid in preempted:
         assert sched.done[rid].finished_round >= 0
     # no runaway: serial service after the last arrival, plus one
@@ -152,7 +153,7 @@ def test_priority_arrival_preempts_lowest_youngest(tiny):
     hi = sched.submit(p_high, 2, arrival_round=2, priority=2)
     outs, stats = sched.run()
 
-    kinds = [(k, rid) for k, rid, _ in stats.policy]
+    kinds = [(k, rid) for k, rid, _, _ in stats.policy]
     assert ("preempt", lo) in kinds
     assert stats.preemptions == 1
     hi_req, lo_req = sched.done[hi], sched.done[lo]
@@ -225,7 +226,7 @@ def test_slo_shed_rejects_stale_admissions(tiny):
     for r in shed:
         assert sched.done[r].generated == 0
         assert len(outs[r]) == 0       # never admitted, nothing produced
-    rejects = [rid for k, rid, _ in stats.policy if k == "reject"]
+    rejects = [rid for k, rid, _, _ in stats.policy if k == "reject"]
     assert sorted(rejects) == sorted(shed)
 
 
@@ -246,7 +247,9 @@ def test_golden_trace_policy_sequence(tiny):
     _, stats = sched.run()
 
     got = {
-        "policy": [[k, rid, rnd] for k, rid, rnd in stats.policy],
+        # t_wall (4th element) is timing, not policy — golden pins only
+        # the deterministic triple
+        "policy": [[k, rid, rnd] for k, rid, rnd, _ in stats.policy],
         "requests": {
             str(t.rid): {
                 "tenant": t.tenant, "priority": t.priority,
