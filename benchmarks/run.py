@@ -5,18 +5,24 @@
 Prints ``name,us_per_call,derived`` CSV; detailed rows land in
 experiments/bench/*.json, and each entry's headline CSV lines are also
 written to a repo-root ``BENCH_<entry>.json`` so the perf trajectory
-stays machine-readable across PRs without parsing stdout.
+stays machine-readable across PRs without parsing stdout.  Every run
+additionally APPENDS one JSONL line per entry (with the git sha and
+date) to ``BENCH_history.jsonl`` — ``benchmarks/trajectory.py`` diffs
+the two most recent runs of each entry and flags >10% regressions.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import subprocess
 import sys
 import time
 import traceback
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+HISTORY = ROOT / "BENCH_history.jsonl"
 
 BENCHES = {
     "fig2": "benchmarks.bench_memory_distribution",
@@ -46,11 +52,35 @@ def _headline_rows(lines):
     return rows
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        return "unknown"
+
+
+def append_history(entry: str, rows, seconds: float,
+                   path: Path = HISTORY) -> None:
+    """One JSONL line per bench run: the machine-readable perf
+    trajectory ``benchmarks/trajectory.py`` regresses against."""
+    rec = {"entry": entry, "sha": _git_sha(),
+           "date": datetime.datetime.now(datetime.timezone.utc)
+                   .strftime("%Y-%m-%dT%H:%M:%SZ"),
+           "seconds": round(seconds, 2), "rows": rows}
+    with path.open("a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
 def write_summary(entry: str, lines, seconds: float) -> Path:
     out = ROOT / f"BENCH_{entry}.json"
+    rows = _headline_rows(lines)
     out.write_text(json.dumps(
         {"entry": entry, "seconds": round(seconds, 2),
-         "rows": _headline_rows(lines)}, indent=1) + "\n")
+         "rows": rows}, indent=1) + "\n")
+    append_history(entry, rows, seconds)
     return out
 
 

@@ -1,0 +1,115 @@
+"""Perf-trajectory regression differ over ``BENCH_history.jsonl``.
+
+    PYTHONPATH=src python -m benchmarks.trajectory [--history FILE]
+        [--threshold 0.10] [--only entry,entry]
+
+For every bench entry with at least two recorded runs, compare the
+latest run's ``us_per_call`` per row against the previous run's.  A row
+whose latency grew by more than ``threshold`` (default 10%) is a
+REGRESSION; improvements and derived-metric changes are reported
+informationally.  Exits non-zero when any regression was flagged, so CI
+can gate on it.  Rows with a zero/absent baseline are skipped (many
+figure-reproduction benches report ``us_per_call=0`` and carry their
+result in ``derived``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_HISTORY = ROOT / "BENCH_history.jsonl"
+
+
+def load_history(path: Path) -> dict:
+    """{entry: [run, ...]} in file (= chronological) order."""
+    runs: dict = {}
+    if not path.exists():
+        return runs
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        rec = json.loads(line)
+        runs.setdefault(rec["entry"], []).append(rec)
+    return runs
+
+
+def diff_entry(prev: dict, latest: dict, threshold: float) -> list:
+    """Row-by-row deltas between two runs of one entry.  Returns dicts
+    with ``name`` / ``prev_us`` / ``latest_us`` / ``delta`` (fractional;
+    None when no baseline) / ``regressed`` / ``derived`` pairs."""
+    prev_rows = {r["name"]: r for r in prev.get("rows", [])}
+    out = []
+    for row in latest.get("rows", []):
+        base = prev_rows.get(row["name"])
+        prev_us = base.get("us_per_call", 0.0) if base else 0.0
+        latest_us = row.get("us_per_call", 0.0)
+        delta = ((latest_us - prev_us) / prev_us) if prev_us else None
+        out.append({
+            "name": row["name"], "prev_us": prev_us,
+            "latest_us": latest_us, "delta": delta,
+            "regressed": delta is not None and delta > threshold,
+            "derived": (base.get("derived") if base else None,
+                        row.get("derived")),
+        })
+    return out
+
+
+def report(runs: dict, threshold: float, only=None) -> int:
+    """Print the trajectory diff; returns the regression count."""
+    regressions = 0
+    entries = sorted(only) if only else sorted(runs)
+    for entry in entries:
+        hist = runs.get(entry, [])
+        if len(hist) < 2:
+            print(f"{entry}: {len(hist)} run(s) recorded — nothing to diff")
+            continue
+        prev, latest = hist[-2], hist[-1]
+        print(f"{entry}: {prev['sha']} ({prev['date']}) -> "
+              f"{latest['sha']} ({latest['date']})")
+        for d in diff_entry(prev, latest, threshold):
+            if d["delta"] is None:
+                mark, delta = " ", "(no baseline)"
+            else:
+                delta = f"{d['delta']:+.1%}"
+                mark = "!" if d["regressed"] else " "
+            print(f"  {mark} {d['name']:<44} "
+                  f"{d['prev_us']:>12.1f} -> {d['latest_us']:>12.1f} us "
+                  f"{delta}")
+            if d["regressed"]:
+                regressions += 1
+            p_der, l_der = d["derived"]
+            if p_der is not None and p_der != l_der:
+                print(f"      derived: {p_der} -> {l_der}")
+    if regressions:
+        print(f"\n{regressions} row(s) regressed more than "
+              f"{threshold:.0%} vs the previous run")
+    else:
+        print("\nno regressions above threshold")
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default=str(DEFAULT_HISTORY),
+                    help="BENCH_history.jsonl path")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional us_per_call growth that counts as a "
+                    "regression (default 0.10 = 10%%)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry subset")
+    args = ap.parse_args()
+    runs = load_history(Path(args.history))
+    if not runs:
+        print(f"no history at {args.history} — run benchmarks.run first")
+        return
+    only = args.only.split(",") if args.only else None
+    if report(runs, args.threshold, only):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -117,6 +117,48 @@ def format_drift(report: dict) -> str:
     return "\n".join(lines)
 
 
+# ===========================================================================
+# Peak-breakdown attribution (per-owner byte shares at the ledger peak)
+# ===========================================================================
+def peak_breakdown_report(stats) -> dict:
+    """Attribute the run's ledger peak to its resident tiers.
+
+    Duck-typed like ``drift_report``: ``stats`` is anything carrying
+    ``peak_bytes`` and a ``peak_breakdown`` dict (``RunStats`` or
+    ``ServeStats``).  The breakdown is the by-owner snapshot taken under
+    the ledger lock at the instant the peak was set, so the shares sum
+    EXACTLY to ``peak_bytes`` — a mismatch means a ledger bug, and the
+    report surfaces it as a non-empty ``unattributed`` row rather than
+    hiding it.  Returns ``{"peak_bytes", "rows": [...], "unattributed"}``
+    with rows sorted largest share first."""
+    peak = getattr(stats, "peak_bytes", 0) or 0
+    breakdown = dict(getattr(stats, "peak_breakdown", None) or {})
+    rows = [{"owner": o, "bytes": b,
+             "share": (b / peak) if peak else 0.0}
+            for o, b in sorted(breakdown.items(),
+                               key=lambda kv: (-kv[1], kv[0]))]
+    return {"peak_bytes": peak, "rows": rows,
+            "unattributed": peak - sum(breakdown.values())}
+
+
+def format_peak_breakdown(report: dict) -> str:
+    """Aligned text table for ``peak_breakdown_report`` (serve.py prints
+    this under the end-of-run summary)."""
+    peak = report["peak_bytes"]
+    lines = [f"ledger peak attribution (peak = {peak:,} bytes):",
+             f"  {'owner':<16} {'bytes':>14} {'share':>7}"]
+    if not report["rows"]:
+        lines.append("  (no ledger charges recorded)")
+    for row in report["rows"]:
+        lines.append(f"  {row['owner']:<16} {row['bytes']:>14,} "
+                     f"{row['share']:>6.1%}")
+    if report["unattributed"]:
+        lines.append(f"  {'UNATTRIBUTED':<16} "
+                     f"{report['unattributed']:>14,} "
+                     f"{'!':>7}  (ledger bug: shares must sum to peak)")
+    return "\n".join(lines)
+
+
 def main():
     rows = load_all()
     ok = [d for d in rows if d.get("status") == "ok"]

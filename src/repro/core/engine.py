@@ -64,6 +64,8 @@ itself) and shrinks under admission pressure via LRU eviction.
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 import threading
 import time
 from pathlib import Path
@@ -113,6 +115,9 @@ class RunStats:
     # wired from the telemetry metrics registry as per-run deltas
     retries: int = 0               # transient load failures retried
     faults_absorbed: int = 0       # injected faults hidden by retries
+    # per-owner byte shares at the ledger peak (sums exactly to
+    # peak_bytes; empty for runs that never charged the ledger)
+    peak_breakdown: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def event_log(self, kinds=None):
         return [e for e in self.events if kinds is None or e[1] in kinds]
@@ -135,46 +140,234 @@ class RunStats:
                 if self.draft_tokens else 0.0)
 
 
+#: Resident-tier owner taxonomy (docs/observability.md §Memory
+#: attribution).  Every acquire/release names one of these (or a new
+#: tag, which just works — the taxonomy is advisory, not an enum):
+#:   pin            pinned window + embed/head aux + baseline weights
+#:   stream         in-flight streamed layer shards (PrefetchStream)
+#:   expert_cache   ExpertCache reservation / resident experts
+#:   kv_pages       KV cache bytes, dense reservations and mapped pages
+#:   draft          the pinned speculative-draft model's weights
+#:   spec_headroom  per-request draft dense-cache rows
+LEDGER_OWNERS = ("pin", "stream", "expert_cache", "kv_pages", "draft",
+                 "spec_headroom")
+
+_AUDIT_ENV = "REPRO_LEDGER_AUDIT"
+
+
+class LedgerAuditError(AssertionError):
+    """A memory-accounting invariant broke under ``REPRO_LEDGER_AUDIT=1``:
+    a per-owner balance went negative (double release / wrong owner tag)
+    or an owner held bytes at a drain point (leak).  The message names
+    the owner and the call sites involved."""
+
+
+def _caller_site(depth: int) -> str:
+    """``file.py:line`` of the frame ``depth`` levels up (audit only —
+    never runs on the un-audited hot path)."""
+    try:
+        f = sys._getframe(depth)
+        return f"{Path(f.f_code.co_filename).name}:{f.f_lineno}"
+    except Exception:  # pragma: no cover - interpreter without _getframe
+        return "<unknown>"
+
+
+class _LedgerAudit:
+    """Event recorder behind a ``_Ledger`` when ``REPRO_LEDGER_AUDIT=1``.
+
+    Keeps the full event log, a per-owner stack of outstanding acquires
+    (with the acquiring call site), and per-``(owner, detail)`` balances
+    so leaks can be pinned to a request id.  All methods are called with
+    the ledger's cond lock held."""
+
+    def __init__(self):
+        # (op, owner, detail, nbytes, site) in program order
+        self.events: List[Tuple[str, str, Optional[str], int, str]] = []
+        # owner -> [(nbytes_outstanding, site), ...] LIFO
+        self.open: Dict[str, List[Tuple[int, str]]] = {}
+        # (owner, detail) -> outstanding bytes
+        self.balance: Dict[Tuple[str, Optional[str]], int] = {}
+
+    def charge(self, owner, detail, nbytes, depth=3):
+        site = _caller_site(depth)
+        self.events.append(("acquire", owner, detail, nbytes, site))
+        self.open.setdefault(owner, []).append((nbytes, site))
+        key = (owner, detail)
+        self.balance[key] = self.balance.get(key, 0) + nbytes
+
+    def credit(self, owner, detail, nbytes, owner_resident, depth=3):
+        site = _caller_site(depth)
+        self.events.append(("release", owner, detail, nbytes, site))
+        if owner_resident < 0:
+            stack = self.open.get(owner, [])
+            last = stack[-1][1] if stack else "<no outstanding acquires>"
+            raise LedgerAuditError(
+                f"ledger audit: owner '{owner}' balance went negative "
+                f"({owner_resident} bytes) releasing {nbytes} at {site} "
+                f"— double release or wrong owner tag; last outstanding "
+                f"acquire: {last}")
+        key = (owner, detail)
+        self.balance[key] = self.balance.get(key, 0) - nbytes
+        # unwind the outstanding-acquire stack LIFO (releases may split
+        # or merge acquires byte-wise; only the byte totals must match)
+        left = nbytes
+        stack = self.open.get(owner, [])
+        while left > 0 and stack:
+            got, site0 = stack.pop()
+            if got > left:
+                stack.append((got - left, site0))
+                left = 0
+            else:
+                left -= got
+
+    def move(self, src, dst, nbytes, src_resident, detail, depth=3):
+        site = _caller_site(depth)
+        self.events.append(("transfer", f"{src}->{dst}", detail, nbytes,
+                            site))
+        if src_resident < 0:
+            raise LedgerAuditError(
+                f"ledger audit: transfer of {nbytes} bytes from '{src}' "
+                f"to '{dst}' at {site} drove '{src}' negative "
+                f"({src_resident} bytes)")
+        left = nbytes
+        stack = self.open.get(src, [])
+        while left > 0 and stack:
+            got, site0 = stack.pop()
+            if got > left:
+                stack.append((got - left, site0))
+                left = 0
+            else:
+                left -= got
+        self.open.setdefault(dst, []).append((nbytes, site))
+
+    def check_drained(self, by_owner, owners):
+        bad = []
+        for o in owners:
+            resid = by_owner.get(o, 0)
+            if resid:
+                sites = [s for _, s in self.open.get(o, [])]
+                where = ", ".join(sites[-3:]) if sites else "<unknown site>"
+                bad.append(f"owner '{o}' holds {resid} bytes "
+                           f"(outstanding acquires: {where})")
+        if bad:
+            raise LedgerAuditError(
+                "ledger audit: non-zero residue at drain point: "
+                + "; ".join(bad))
+
+
 class _Ledger:
     """Resident-bytes accounting + budget gate (Daemon Agent state).
 
+    Every ``acquire``/``release`` carries an ``owner`` tag (one of
+    ``LEDGER_OWNERS``) so the scalar total decomposes into per-tier
+    balances (``by_owner``); at every new peak the full breakdown is
+    snapshotted under the same lock (``peak_breakdown``), so its values
+    sum EXACTLY to ``peak``.  ``transfer`` re-attributes bytes between
+    owners without touching the total (kept stream shards becoming
+    pinned-window bytes).
+
     Telemetry: every acquire/release samples the resident total into the
-    ``ledger.resident_bytes`` gauge (always on — a few attribute stores)
-    and, when tracing is enabled, into the ``ledger_resident_bytes``
-    counter track the Chrome-trace exporter renders as a residency
-    timeline.  Both sites guard on ``tracer.enabled`` so the disabled
-    path adds no allocation."""
+    ``ledger.resident_bytes`` gauge plus a per-owner
+    ``ledger.<owner>.resident_bytes`` gauge (always on — a few attribute
+    stores) and, when tracing is enabled, into the
+    ``ledger_resident_bytes`` / ``ledger_resident_bytes.<owner>``
+    counter tracks the Chrome-trace exporter renders as residency
+    timelines.  The traced sites guard on ``tracer.enabled`` so the
+    disabled path adds no allocation.
+
+    Audit mode (``REPRO_LEDGER_AUDIT=1``, default-on under pytest via
+    tests/conftest.py) records every event with its call site and raises
+    ``LedgerAuditError`` on negative per-owner balances (double release)
+    or on residue at ``audit_check_drained`` points; off, the hot path
+    pays only the ``by_owner`` dict update."""
 
     def __init__(self, budget: Optional[int]):
         self.budget = budget
         self.resident = 0
         self.peak = 0
+        self.by_owner: Dict[str, int] = {}
+        self.peak_breakdown: Dict[str, int] = {}
         self.cond = threading.Condition()
         self._gauge = _tele.metrics().gauge("ledger.resident_bytes")
+        self._owner_gauges: Dict[str, object] = {}
+        self.audit = (_LedgerAudit()
+                      if os.environ.get(_AUDIT_ENV) == "1" else None)
 
-    def _sample(self):
+    def _sample(self, owner: str):
         self._gauge.set(self.resident)
+        og = self._owner_gauges.get(owner)
+        if og is None:
+            og = self._owner_gauges[owner] = _tele.metrics().gauge(
+                f"ledger.{owner}.resident_bytes")
+        og.set(self.by_owner.get(owner, 0))
         tr = _tele.get_tracer()
         if tr.enabled:
             tr.counter("ledger_resident_bytes", self.resident)
+            tr.counter(f"ledger_resident_bytes.{owner}",
+                       self.by_owner.get(owner, 0))
 
-    def acquire(self, nbytes: int, stop_flag):
+    def acquire(self, nbytes: int, stop_flag=None, *,
+                owner: str = "untagged", detail: Optional[str] = None):
         """Loader-side: blocks while the budget would be exceeded
-        (paper's S_stop semantics)."""
+        (paper's S_stop semantics).  ``owner`` attributes the bytes to a
+        resident tier; ``detail`` is an audit-only sub-key (request id,
+        shard name) for per-entity residue queries."""
         with self.cond:
             if self.budget is not None:
                 while (self.resident + nbytes > self.budget
-                       and self.resident > 0 and not stop_flag()):
+                       and self.resident > 0
+                       and not (stop_flag() if stop_flag else False)):
                     self.cond.wait(timeout=0.1)
             self.resident += nbytes
-            self.peak = max(self.peak, self.resident)
-            self._sample()
+            self.by_owner[owner] = self.by_owner.get(owner, 0) + nbytes
+            if self.resident > self.peak:
+                self.peak = self.resident
+                self.peak_breakdown = {o: b for o, b in
+                                       self.by_owner.items() if b}
+            if self.audit is not None:
+                self.audit.charge(owner, detail, nbytes)
+            self._sample(owner)
 
-    def release(self, nbytes: int):
+    def release(self, nbytes: int, *, owner: str = "untagged",
+                detail: Optional[str] = None):
         with self.cond:
             self.resident -= nbytes
-            self._sample()
+            self.by_owner[owner] = self.by_owner.get(owner, 0) - nbytes
+            if self.audit is not None:
+                self.audit.credit(owner, detail, nbytes,
+                                  self.by_owner[owner])
+            self._sample(owner)
             self.cond.notify_all()
+
+    def transfer(self, nbytes: int, src: str, dst: str, *,
+                 detail: Optional[str] = None):
+        """Re-attribute ``nbytes`` resident bytes from owner ``src`` to
+        ``dst`` (total resident unchanged — no budget interaction)."""
+        with self.cond:
+            self.by_owner[src] = self.by_owner.get(src, 0) - nbytes
+            self.by_owner[dst] = self.by_owner.get(dst, 0) + nbytes
+            if self.audit is not None:
+                self.audit.move(src, dst, nbytes, self.by_owner[src],
+                                detail)
+            self._sample(src)
+            self._sample(dst)
+
+    def audit_check_drained(self, *owners: str):
+        """Raise ``LedgerAuditError`` if any named owner still holds
+        bytes.  No-op when audit mode is off, so drain points call it
+        unconditionally."""
+        if self.audit is None:
+            return
+        with self.cond:
+            self.audit.check_drained(self.by_owner, owners)
+
+    def audit_residue(self, owner: str, detail: Optional[str] = None):
+        """Outstanding bytes for ``(owner, detail)`` — audit mode only
+        (returns None when off)."""
+        if self.audit is None:
+            return None
+        with self.cond:
+            return self.audit.balance.get((owner, detail), 0)
 
 
 def _fault_snap() -> Tuple[int, ...]:
@@ -225,7 +418,7 @@ class DraftModel:
     def pin(self, ledger: Optional[_Ledger] = None):
         """Load every shard resident; charges ``ledger`` for the lot."""
         if ledger is not None:
-            ledger.acquire(self.total_bytes, lambda: False)
+            ledger.acquire(self.total_bytes, owner="draft")
         if self.weights is None:
             self.weights = {
                 name: jax.tree.map(jnp.asarray, load_shard(self.dir, name))
@@ -236,7 +429,7 @@ class DraftModel:
         """Return the draft's bytes to the budget (weights stay cached
         host-side for the next run; the LEDGER charge is what budgets)."""
         if ledger is not None:
-            ledger.release(self.total_bytes)
+            ledger.release(self.total_bytes, owner="draft")
 
     def prefill(self, tokens, total_len: int):
         """Prompt pass; returns (last-token logits (B, V), caches)."""
@@ -446,8 +639,10 @@ class PipeloadEngine:
                     stream.destroy(k, w)             # S_dest(k)
                 else:
                     # pin window / pipeswitch: the weights and their
-                    # ledger charge leave the stream with us
-                    stream.keep(k)
+                    # ledger charge leave the stream with us — pinned
+                    # layers re-attribute to the pin window, pipeswitch
+                    # keeps stay stream bytes until the end-of-pass swap
+                    stream.keep(k, owner="pin" if pinned else None)
                 del w
         if not destroy:
             # pipeswitch: the whole model was resident for the pass (peak ==
@@ -456,7 +651,8 @@ class PipeloadEngine:
             # every non-pinned layer here.
             for k in range(n):
                 if names[k] not in self._resident:
-                    ledger.release(self.shards[names[k]]["bytes"])
+                    ledger.release(self.shards[names[k]]["bytes"],
+                                   owner="stream")
         return x
 
     # ------------------------------------------------------------------
@@ -465,7 +661,8 @@ class PipeloadEngine:
         resident for the whole run."""
         for aux in ("embed", "head"):
             if aux not in self._resident:
-                ledger.acquire(self.shards[aux]["bytes"], lambda: False)
+                ledger.acquire(self.shards[aux]["bytes"],
+                               owner="pin", detail=aux)
                 self._resident[aux] = self._load(aux)
                 events.append((time.perf_counter() - t0, "load_end", aux))
 
@@ -523,7 +720,8 @@ class PipeloadEngine:
                 self.expert.begin_round()
             weights = {}
             for name in self.layer_names:
-                ledger.acquire(self.shards[name]["bytes"], lambda: False)
+                ledger.acquire(self.shards[name]["bytes"],
+                               owner="pin", detail=name)
                 weights[name] = self._load(name)
                 events.append((time.perf_counter() - t0, "load_end", name))
             for k, name in enumerate(self.layer_names):
@@ -559,6 +757,7 @@ class PipeloadEngine:
                                 loads=sum(1 for e in events
                                           if e[1] == "load_end"),
                                 streamed_bytes=self._streamed(events),
+                                peak_breakdown=dict(ledger.peak_breakdown),
                                 **self._expert_stats(snap),
                                 **_fault_delta(fsnap))
 
@@ -620,6 +819,7 @@ class PipeloadEngine:
                               streamed_bytes=self._streamed(events),
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
+                              peak_breakdown=dict(ledger.peak_breakdown),
                               **self._expert_stats(snap),
                               **_fault_delta(fsnap))
 
@@ -682,7 +882,7 @@ class PipeloadEngine:
             else:
                 need = cache_total
             if need > mapped["bytes"]:
-                ledger.acquire(need - mapped["bytes"], lambda: False)
+                ledger.acquire(need - mapped["bytes"], owner="kv_pages")
                 events.append((time.perf_counter() - t0, "cache_reserve",
                                str(need - mapped["bytes"])))
                 mapped["bytes"] = need
@@ -707,7 +907,8 @@ class PipeloadEngine:
             if weights is None:
                 weights = {}
                 for name in names:
-                    ledger.acquire(self.shards[name]["bytes"], lambda: False)
+                    ledger.acquire(self.shards[name]["bytes"],
+                                   owner="pin", detail=name)
                     weights[name] = self._load(name)
                     events.append((time.perf_counter() - t0, "load_end",
                                    name))
@@ -715,7 +916,7 @@ class PipeloadEngine:
             else:
                 for name in names:   # already resident from an earlier run
                     ledger.acquire(self.shards[name]["bytes"],
-                                   lambda: False)
+                                   owner="pin", detail=name)
             for k, name in enumerate(names):
                 x = prefill_apply(k, weights[name], x)
         else:
@@ -758,7 +959,9 @@ class PipeloadEngine:
         toks.block_until_ready()
         lat = time.perf_counter() - t0
         caches.clear()                    # free cache pages ...
-        ledger.release(mapped["bytes"])   # ... and return them to the budget
+        ledger.release(mapped["bytes"],   # ... and return them to the budget
+                       owner="kv_pages")
+        ledger.audit_check_drained("stream", "kv_pages")
         return toks, RunStats(self.mode, self.m, lat, ledger.peak, events,
                               loads=sum(1 for e in events
                                         if e[1] == "load_end"),
@@ -766,6 +969,7 @@ class PipeloadEngine:
                               new_tokens=new_tokens, prefill_s=prefill_s,
                               decode_s=lat - prefill_s,
                               cache_bytes=mapped["bytes"], kv_cache=True,
+                              peak_breakdown=dict(ledger.peak_breakdown),
                               **self._expert_stats(snap),
                               **_fault_delta(fsnap))
 
@@ -844,7 +1048,7 @@ class PipeloadEngine:
         draft.pin(ledger)
         events.append((time.perf_counter() - t0, "draft_pin",
                        str(draft.total_bytes)))
-        ledger.acquire(draft_cache_bytes, lambda: False)
+        ledger.acquire(draft_cache_bytes, owner="spec_headroom")
 
         toks: List[int] = [int(t) for t in np.asarray(toks_in).reshape(-1)]
         pool = PagePool(ps, page_bytes, ledger)
@@ -983,8 +1187,10 @@ class PipeloadEngine:
         out.block_until_ready()
         lat = time.perf_counter() - t0
         table.release_all(pool)
-        ledger.release(draft_cache_bytes)
+        ledger.release(draft_cache_bytes, owner="spec_headroom")
         draft.unpin(ledger)
+        ledger.audit_check_drained("stream", "kv_pages", "draft",
+                                   "spec_headroom")
         return out, RunStats(self.mode, self.m, lat, ledger.peak, events,
                              loads=sum(1 for e in events
                                        if e[1] == "load_end"),
@@ -996,6 +1202,7 @@ class PipeloadEngine:
                              spec_rounds=spec_rounds,
                              draft_tokens=draft_tokens,
                              accepted_tokens=accepted,
+                             peak_breakdown=dict(ledger.peak_breakdown),
                              **_fault_delta(fsnap))
 
     # ------------------------------------------------------------------

@@ -221,11 +221,11 @@ class ExpertStreamEngine:
             self._reserved_mode = ledger.budget is not None
             if self._reserved_mode:
                 self.reserved = max(capacity, self.cache.resident)
-                ledger.acquire(self.reserved, lambda: False)
+                ledger.acquire(self.reserved, owner="expert_cache")
             else:
                 self.reserved = capacity
                 if self.cache.resident:
-                    ledger.acquire(self.cache.resident, lambda: False)
+                    ledger.acquire(self.cache.resident, owner="expert_cache")
             events.append((time.perf_counter() - t0, "expert_reserve",
                            str(self.reserved)))
 
@@ -252,7 +252,7 @@ class ExpertStreamEngine:
             freed = self.reserved - target
             self.reserved = target
         if freed:
-            self._ledger.release(freed)
+            self._ledger.release(freed, owner="expert_cache")
         return freed
 
     def clear(self):
@@ -267,7 +267,7 @@ class ExpertStreamEngine:
                 if evicted is None:
                     return
                 if self._ledger is not None and not self._reserved_mode:
-                    self._ledger.release(evicted[1])
+                    self._ledger.release(evicted[1], owner="expert_cache")
 
     # -- round bookkeeping ---------------------------------------------
     def begin_round(self):
@@ -353,7 +353,7 @@ class ExpertStreamEngine:
                 if charge:
                     # unreserved acquire never parks (no budget gate), so
                     # charging before the dup re-check below cannot wedge
-                    self._ledger.acquire(nbytes, lambda: False)
+                    self._ledger.acquire(nbytes, owner="expert_cache")
                 with self._lock:
                     # re-check under the lock: a concurrent fetch that
                     # missed on the same (layer, expert) while we held no
@@ -367,7 +367,7 @@ class ExpertStreamEngine:
                         self.cache.put((layer_name, e), w, nbytes)
                         out[e] = w
                 if duplicate and charge:
-                    self._ledger.release(nbytes)     # drop our copy's charge
+                    self._ledger.release(nbytes, owner="expert_cache")  # drop our copy's charge
                 del w
 
     def _make_room(self, need: int, locked: frozenset):
@@ -391,7 +391,7 @@ class ExpertStreamEngine:
                     f"planner size the cache")
             key, nbytes = evicted
             if self._ledger is not None and not self._reserved_mode:
-                self._ledger.release(nbytes)
+                self._ledger.release(nbytes, owner="expert_cache")
             self._event("expert_evict", f"{key[0]}#{key[1]}")
             _tele.metrics().counter("expert.evictions").inc()
 

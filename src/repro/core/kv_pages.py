@@ -78,6 +78,10 @@ class PagePool:
         self.page_size = page_size
         self.page_bytes = page_bytes
         self.ledger = ledger
+        # ledger attribution: every page charge is `kv_pages`; `detail`
+        # is an audit-only sub-key the scheduler sets around
+        # request-scoped alloc/release batches (e.g. the request id)
+        self.detail: Optional[str] = None
         self._ref: Dict[int, int] = {}      # live page id -> refcount
         self._free: List[int] = []          # recycled ids, LIFO
         self.capacity = 0                   # high-water page count
@@ -129,7 +133,8 @@ class PagePool:
         self.mapped_peak = max(self.mapped_peak, len(self._ref))
         self._sample()
         if self.ledger is not None:
-            self.ledger.acquire(self.page_bytes, lambda: False)
+            self.ledger.acquire(self.page_bytes, owner="kv_pages",
+                                detail=self.detail)
         return pid
 
     def share(self, pid: int) -> int:
@@ -156,7 +161,8 @@ class PagePool:
         self._m_frees.inc()
         self._sample()
         if self.ledger is not None:
-            self.ledger.release(self.page_bytes)
+            self.ledger.release(self.page_bytes, owner="kv_pages",
+                                detail=self.detail)
         return True
 
 

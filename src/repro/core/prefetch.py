@@ -94,11 +94,12 @@ class PrefetchStream:
                  sizes: Sequence[int], load_fn: Callable[[str], dict], *,
                  ledger=None, preloaded: Optional[Dict[int, dict]] = None,
                  events: Optional[list] = None, t0: float = 0.0,
-                 retries: Optional[int] = None):
+                 retries: Optional[int] = None, owner: str = "stream"):
         assert len(keys) == len(sizes)
         self._runtime = runtime
         self._load_fn = load_fn
         self._ledger = ledger
+        self._owner = owner
         self._events = events
         self._t0 = t0
         self._retries = runtime.retries if retries is None else int(retries)
@@ -141,7 +142,8 @@ class PrefetchStream:
                     self._grant_cond.wait(timeout=0.1)
             if self._done.is_set():
                 return False
-        self._ledger.acquire(job.nbytes, self._done.is_set)  # may park: S_stop
+        self._ledger.acquire(job.nbytes, self._done.is_set,  # may park: S_stop
+                             owner=self._owner, detail=job.key)
         job.charged = True
         job.state = CHARGED
         if self._ledger.budget is not None:
@@ -159,7 +161,8 @@ class PrefetchStream:
             charged, job.charged = job.charged, False
             job.state = RELEASED
         if charged and self._ledger is not None:
-            self._ledger.release(job.nbytes)
+            self._ledger.release(job.nbytes, owner=self._owner,
+                                 detail=job.key)
 
     def _fail(self, e: BaseException):
         self._err.append(e)
@@ -253,12 +256,20 @@ class PrefetchStream:
             self._pending_destroy += 1
         self._runtime._enqueue_destroy(self, self._jobs[k], weights)
 
-    def keep(self, k: int):
+    def keep(self, k: int, owner: Optional[str] = None):
         """Transfer ownership out of the stream: the caller now owns the
         weights AND the ledger charge (pinned windows keep both; the
-        pipeswitch pass releases at end-of-pass)."""
+        pipeswitch pass releases at end-of-pass).  ``owner`` re-attributes
+        the charge to that tier (pinned layers become ``pin`` bytes);
+        None leaves it on the stream's own tag."""
         with self._cond:
-            self._jobs[k].state = KEPT
+            job = self._jobs[k]
+            job.state = KEPT
+            charged = job.charged
+        if (owner is not None and owner != self._owner and charged
+                and self._ledger is not None):
+            self._ledger.transfer(job.nbytes, self._owner, owner,
+                                  detail=job.key)
 
     def _finalize_destroy(self, job: _Job, weights):
         """Drainer-side: free the weights and return the charge."""
@@ -275,7 +286,8 @@ class PrefetchStream:
             charged, job.charged = job.charged, False
             job.state = DESTROYED
         if charged and self._ledger is not None:
-            self._ledger.release(job.nbytes)
+            self._ledger.release(job.nbytes, owner=self._owner,
+                                 detail=job.key)
         self._event("destroy", job.key, time.perf_counter())
         with self._destroy_cond:
             self._pending_destroy -= 1
@@ -311,7 +323,8 @@ class PrefetchStream:
                 with self._cond:
                     charged, job.charged = job.charged, False
                 if charged and self._ledger is not None:
-                    self._ledger.release(job.nbytes)
+                    self._ledger.release(job.nbytes, owner=self._owner,
+                                         detail=job.key)
 
     def __enter__(self) -> "PrefetchStream":
         return self
@@ -445,13 +458,15 @@ class PrefetchRuntime:
                load_fn: Callable[[str], dict], *, ledger=None,
                preloaded: Optional[Dict[int, dict]] = None,
                events: Optional[list] = None, t0: float = 0.0,
-               retries: Optional[int] = None) -> PrefetchStream:
+               retries: Optional[int] = None,
+               owner: str = "stream") -> PrefetchStream:
         """One round's ordered prefetch over ``keys`` (``preloaded`` maps
         already-resident indices to their weights: published immediately,
-        never charged)."""
+        never charged).  ``owner`` tags every ledger charge the stream
+        makes (see engine.LEDGER_OWNERS)."""
         return PrefetchStream(self, keys, sizes, load_fn, ledger=ledger,
                               preloaded=preloaded, events=events, t0=t0,
-                              retries=retries)
+                              retries=retries, owner=owner)
 
     # -- teardown ----------------------------------------------------------
     @property

@@ -256,6 +256,9 @@ class ServeStats:
     # wired from the telemetry metrics registry as per-session deltas
     retries: int = 0
     faults_absorbed: int = 0
+    # per-owner byte shares at the session ledger's peak (sums exactly
+    # to peak_bytes; additive — golden traces pin only `policy`)
+    peak_breakdown: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -586,11 +589,13 @@ class BatchScheduler:
         shared = len(walk[0]) if walk is not None else 0
         if not self._fits_paged(n_pages - shared, inflight_after):
             return False
+        self.pool.detail = f"req{req.rid}"
         if tree is not None:
             pids, n_shared = tree.insert(toks, self.pool, walk=walk)
         else:
             pids, n_shared = [self.pool.alloc()
                               for _ in range(n_pages)], 0
+        self.pool.detail = None
         req.table = BlockTable(pids, n_shared)
         req.tokens = toks
         if self.chunk and len(toks) > self.chunk:
@@ -603,7 +608,9 @@ class BatchScheduler:
             # the request's dense draft-cache row lives as long as the
             # request is in flight (never blocks: _fits_paged charged it
             # via _spec_resident, and at a boundary nothing streams)
-            self.ledger.acquire(self._draft_cache_bytes, lambda: False)
+            self.ledger.acquire(self._draft_cache_bytes,
+                                owner="spec_headroom",
+                                detail=f"req{req.rid}")
         return True
 
     def _preempt(self, victim: Request) -> None:
@@ -613,14 +620,19 @@ class BatchScheduler:
         re-admission."""
         idx = self.inflight.index(victim)
         if self.page_size:
+            self.pool.detail = f"req{victim.rid}"
             victim.table.release_all(self.pool, self._tree(victim))
+            self.pool.detail = None
             if self.spec_depth:
                 self._draft_caches = self._rows_keep(
                     self._draft_caches,
                     [i for i in range(len(self.inflight)) if i != idx])
-                self.ledger.release(self._draft_cache_bytes)
+                self.ledger.release(self._draft_cache_bytes,
+                                    owner="spec_headroom",
+                                    detail=f"req{victim.rid}")
         else:
-            self.ledger.release(victim.cache_bytes)
+            self.ledger.release(victim.cache_bytes, owner="kv_pages",
+                                detail=f"req{victim.rid}")
             self._cache_resident -= victim.cache_bytes
             self._drop_rows([i for i in range(len(self.inflight))
                              if i != idx])
@@ -667,7 +679,9 @@ class BatchScheduler:
             self._preempt(victim)
             if victim is req:
                 return None
+        self.pool.detail = f"req{req.rid}"   # _preempt cleared it
         pid = self.pool.alloc()
+        self.pool.detail = None
         if pid >= self._pool_rows:
             raise RuntimeError(
                 f"page pool overflow: page {pid} >= {self._pool_rows} "
@@ -838,7 +852,8 @@ class BatchScheduler:
         # reserve the request's pages for its whole lifetime (never
         # blocks: _fits checked the floor, and at a boundary nothing is
         # streaming)
-        self.ledger.acquire(req.cache_bytes, lambda: False)
+        self.ledger.acquire(req.cache_bytes, owner="kv_pages",
+                            detail=f"req{req.rid}")
         self._cache_resident += req.cache_bytes
         self._cache_peak = max(self._cache_peak, self._cache_resident)
         # a preempted request resumes from its tokens so far (re-prefill),
@@ -906,11 +921,16 @@ class BatchScheduler:
         page granularity)."""
         for req in finished:
             if self.page_size:
+                self.pool.detail = f"req{req.rid}"
                 req.table.release_all(self.pool, self._tree(req))
+                self.pool.detail = None
                 if self.spec_depth:
-                    self.ledger.release(self._draft_cache_bytes)
+                    self.ledger.release(self._draft_cache_bytes,
+                                        owner="spec_headroom",
+                                        detail=f"req{req.rid}")
             else:
-                self.ledger.release(req.cache_bytes)
+                self.ledger.release(req.cache_bytes, owner="kv_pages",
+                                    detail=f"req{req.rid}")
                 self._cache_resident -= req.cache_bytes
             req.finished_round = self.round
             req.t_done = time.perf_counter() - self._t0
@@ -1303,6 +1323,12 @@ class BatchScheduler:
                       else self._cache_peak)
         faults = _tele.counter_values("prefetch.retries",
                                       "prefetch.faults_absorbed")
+        # every request retired: the request-scoped tiers must have
+        # drained exactly (audit mode raises naming the leaking owner;
+        # the pinned window / draft / expert reservation legitimately
+        # stay resident for the session)
+        self.ledger.audit_check_drained("stream", "kv_pages",
+                                        "spec_headroom")
         stats = ServeStats(
             rounds=self.round, latency_s=lat, peak_bytes=self.ledger.peak,
             loads=sum(1 for e in self.events if e[1] == "load_end"),
@@ -1313,6 +1339,7 @@ class BatchScheduler:
             seed=self.seed, **paged_kw, **expert_kw, **spec_kw,
             retries=faults[0] - self._fault_base[0],
             faults_absorbed=faults[1] - self._fault_base[1],
+            peak_breakdown=dict(self.ledger.peak_breakdown),
             **self._slo_stats())
         self._record_metrics(stats)
         return outs, stats
@@ -1330,6 +1357,10 @@ class BatchScheduler:
         m.gauge("serve.streamed_bytes").set(stats.streamed_bytes)
         m.gauge("serve.ledger_peak_bytes").set(stats.peak_bytes)
         m.gauge("serve.cache_peak_bytes").set(stats.cache_bytes_peak)
+        # per-owner shares at the ledger peak (exported via --metrics-out;
+        # they sum exactly to serve.ledger_peak_bytes)
+        for owner, nbytes in stats.peak_breakdown.items():
+            m.gauge(f"ledger.peak.{owner}_bytes").set(nbytes)
         if stats.expert_hits or stats.expert_misses:
             m.gauge("serve.expert_hit_rate").set(stats.expert_hit_rate)
         if stats.draft_tokens:

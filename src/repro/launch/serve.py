@@ -80,7 +80,9 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.analysis.report import drift_report, format_drift
+from repro.analysis.report import (drift_report, format_drift,
+                                   format_peak_breakdown,
+                                   peak_breakdown_report)
 from repro.checkpoint import partition_and_save
 from repro.configs import get, names
 from repro.core import SLO, BatchScheduler, Hermes
@@ -234,6 +236,7 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         if stats.retries or stats.faults_absorbed:
             print(f"  prefetch faults: {stats.retries} retries, "
                   f"{stats.faults_absorbed} loads recovered")
+        print(format_peak_breakdown(peak_breakdown_report(stats)))
         export_telemetry(trace_out, metrics_out)
         return out, stats
 
@@ -402,6 +405,7 @@ def run(arch: str, *, budget_mb: float | None = None, requests: int = 4,
         rows["experts_per_round"] = f"{stats.unique_experts_per_round:.1f}"
         rows["expert_cache_mb"] = f"{stats.expert_cache_bytes/2**20:.1f}"
     print(tele.summary_table(rows, title="serve summary"))
+    print(format_peak_breakdown(peak_breakdown_report(stats)))
     print(format_drift(drift_report(g, stats)))
     for rid, req in sorted(sched.done.items()):
         tag = (f" [{req.tenant} p{req.priority}]"

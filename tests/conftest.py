@@ -15,6 +15,13 @@ if str(TESTS) not in sys.path:
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Ledger audit mode is ON by default under pytest: every acquire/release
+# is recorded with its call site, double-releases raise immediately and
+# drain points verify per-owner residue (engine._LedgerAudit).  Tests
+# that need the production fast path (e.g. the audit on/off identity
+# test) override the env per-ledger via monkeypatch + a fresh _Ledger.
+os.environ.setdefault("REPRO_LEDGER_AUDIT", "1")
+
 # Property-test example counts are capped from the environment by
 # helpers/hypothesis_compat.py (HYPOTHESIS_MAX_EXAMPLES=<n>): explicit
 # @settings(max_examples=...) in the tests would override a hypothesis

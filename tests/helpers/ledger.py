@@ -1,0 +1,31 @@
+"""The suite-wide exact-drain invariant, in ONE place.
+
+Every fault-injection / lifecycle test used to hand-roll its own
+``assert ledger.resident == base`` at the end of a round; with
+owner-attributed accounting the invariant is stronger — each owner's
+balance must hit zero, not just the scalar total — and audit mode
+(``REPRO_LEDGER_AUDIT=1``, default-on under pytest) can name the call
+site that leaked.  Tests call :func:`assert_drained` instead of
+re-implementing the checks.
+"""
+from repro.core.engine import _Ledger  # noqa: F401  (re-export for tests)
+
+
+def assert_drained(ledger, *owners, base=0):
+    """Assert the ledger drained exactly back to ``base`` resident bytes.
+
+    ``owners`` names the tiers that must be at zero (e.g. ``"stream"``,
+    ``"kv_pages"``); with none given and ``base == 0``, EVERY owner must
+    be at zero.  When audit mode is on, the per-owner residue check also
+    runs, so a failure names the outstanding acquire's call site instead
+    of just the byte count.
+    """
+    assert ledger.resident == base, (
+        f"ledger not drained: resident={ledger.resident}, expected {base} "
+        f"(by_owner={ {o: b for o, b in ledger.by_owner.items() if b} })")
+    check = owners or (tuple(ledger.by_owner) if base == 0 else ())
+    for o in check:
+        assert ledger.by_owner.get(o, 0) == 0, (
+            f"owner '{o}' holds {ledger.by_owner[o]} bytes after drain")
+    if check:
+        ledger.audit_check_drained(*check)

@@ -1,0 +1,248 @@
+"""Owner-attributed ledger audit suite.
+
+With ``REPRO_LEDGER_AUDIT=1`` (default-on under pytest, see conftest)
+the ledger records every charge/credit with its owner, detail tag and
+calling site.  These tests arm that machinery the way a real leak
+would: skip a release at each PrefetchStream lifecycle exit path and
+assert the audit *names the owner* (not just a byte count); drain each
+transient owner byte-exact under injected load faults; drain each
+request's tagged pages after retire AND after preemption; and pin that
+turning the audit on changes nothing about the computation.
+"""
+import time
+
+import numpy as np
+import jax
+import pytest
+from helpers.ledger import assert_drained
+
+from repro.checkpoint import load_manifest, partition_and_save
+from repro.configs import get_config
+from repro.core import BatchScheduler, PipeloadEngine, PrefetchRuntime
+from repro.core.engine import (LEDGER_OWNERS, LedgerAuditError, _Ledger)
+from repro.models.api import build_model
+
+MAX_TOTAL = 16
+
+
+@pytest.fixture(scope="module")
+def gpt2s(tmp_path_factory):
+    """Small-but-real GPT-2-geometry checkpoint on disk."""
+    cfg = get_config("gpt2_base").with_(
+        num_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300, vocab_pad_to=4, remat=False)
+    path = tmp_path_factory.mktemp("ckpt") / "gpt2s"
+    api = build_model(cfg)
+    partition_and_save(api.init(jax.random.PRNGKey(0)), cfg, path)
+    return cfg, path
+
+
+def _mem(path, cfg):
+    man = load_manifest(path)
+    layer_b = man["layer_bytes"] // cfg.num_layers
+    other = man["total_bytes"] - man["layer_bytes"]
+    return layer_b, other
+
+
+def _serve(path, cfg, prompts, news, *, page_size=None, budget=None,
+           max_inflight=4, prefix_cache=True, seed=None):
+    eng = PipeloadEngine(path, cfg, mode="pipeload", num_agents=2,
+                         budget_bytes=budget, page_size=page_size)
+    sched = BatchScheduler(eng, max_inflight=max_inflight,
+                           max_total_len=MAX_TOTAL,
+                           prefix_cache=prefix_cache, seed=seed)
+    rids = [sched.submit(p, n) for p, n in zip(prompts, news)]
+    outs, stats = sched.run()
+    return sched, rids, outs, stats
+
+
+# ---------------------------------------------------------------------------
+# leak injection: skip ONE release per lifecycle exit path, audit names
+# the owning subsystem and the leaked acquire's call site
+# ---------------------------------------------------------------------------
+def _skip_next_release(ledger, skip_owner, skips=1):
+    """Monkey-wrench the ledger: silently drop the next ``skips``
+    releases tagged ``skip_owner`` — the exact shape of a forgotten
+    release on one exit path."""
+    real = ledger.release
+    state = {"left": skips}
+
+    def release(nbytes, *, owner="untagged", detail=None):
+        if owner == skip_owner and state["left"] > 0:
+            state["left"] -= 1
+            return
+        real(nbytes, owner=owner, detail=detail)
+
+    ledger.release = release
+
+
+def _run_round(runtime, keys, sizes, ledger, *, fail_load=None,
+               cancel_at=None):
+    def load(key):
+        if fail_load is not None and key == keys[fail_load]:
+            raise IOError(f"boom:{key}")
+        time.sleep(0.001)
+        return {"w": key}
+
+    stream = runtime.stream(keys, sizes, load, ledger=ledger)
+    try:
+        with stream:
+            for k in range(len(keys)):
+                if cancel_at is not None and k == cancel_at:
+                    return          # close() sweep via __exit__
+                w = stream.wait(k)
+                stream.destroy(k, w)
+    except IOError:
+        pass
+
+
+@pytest.mark.parametrize("stage", ["destroy", "cancel", "load-failure"])
+def test_skipped_release_names_owner_and_site(stage):
+    """A release skipped on the destroy path, the close() cancellation
+    sweep, or the load-failure path leaves per-owner residue the audit
+    reports by OWNER NAME with the leaked acquire's file:line."""
+    keys = [f"shard{i}" for i in range(4)]
+    sizes = [100 + i for i in range(4)]
+    ledger = _Ledger(None)
+    _skip_next_release(ledger, "stream")
+    with PrefetchRuntime(workers=2, name="audit") as rt:
+        if stage == "destroy":
+            _run_round(rt, keys, sizes, ledger)
+        elif stage == "cancel":
+            _run_round(rt, keys, sizes, ledger, cancel_at=2)
+        else:
+            _run_round(rt, keys, sizes, ledger, fail_load=2)
+    assert ledger.by_owner["stream"] > 0          # the leak is real
+    with pytest.raises(LedgerAuditError) as ei:
+        ledger.audit_check_drained("stream")
+    msg = str(ei.value)
+    assert "stream" in msg
+    assert ".py:" in msg                          # an acquiring call site
+
+
+def test_double_release_raises_at_the_releasing_site():
+    """Releasing more than an owner ever acquired raises IMMEDIATELY
+    (not at drain time), naming the owner that went negative."""
+    ledger = _Ledger(None)
+    ledger.acquire(100, owner="kv_pages")
+    ledger.release(100, owner="kv_pages")
+    with pytest.raises(LedgerAuditError, match="kv_pages"):
+        ledger.release(100, owner="kv_pages")
+
+
+def test_wrong_owner_release_is_caught():
+    """Bytes acquired as one owner and released as another is the
+    miscounting the scalar ledger could never see."""
+    ledger = _Ledger(None)
+    ledger.acquire(64, owner="stream")
+    with pytest.raises(LedgerAuditError, match="kv_pages"):
+        ledger.release(64, owner="kv_pages")
+
+
+# ---------------------------------------------------------------------------
+# per-owner exact drain under injected load faults (the serving path)
+# ---------------------------------------------------------------------------
+def test_per_owner_drain_under_faults(gpt2s, monkeypatch):
+    """Transient-fault retries churn the stream owner hard; every
+    transient owner still drains byte-exact and the audit agrees."""
+    cfg, path = gpt2s
+    monkeypatch.setenv("REPRO_PREFETCH_FAULT_RATE", "0.2")
+    monkeypatch.setenv("REPRO_PREFETCH_FAULT_SEED", "3")
+    monkeypatch.setenv("REPRO_PREFETCH_RETRIES", "6")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 300, (8,)) for _ in range(3)]
+    sched, _, _, stats = _serve(path, cfg, prompts, [4] * 3,
+                                page_size=4, seed=5)
+    assert stats.retries > 0                    # faults were exercised
+    for owner in ("stream", "kv_pages", "spec_headroom"):
+        assert sched.ledger.by_owner.get(owner, 0) == 0, owner
+    sched.ledger.audit_check_drained("stream", "kv_pages",
+                                     "spec_headroom")
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# per-request drain: retire and preemption both clear the rid's tag
+# ---------------------------------------------------------------------------
+def test_request_tagged_pages_drain_on_retire_and_preempt(gpt2s):
+    """With prefix sharing off, every page a request maps carries its
+    ``req<rid>`` detail tag; after the run (which forced at least one
+    preemption) each request's tagged balance is exactly zero."""
+    cfg, path = gpt2s
+    layer_b, other = _mem(path, cfg)
+    ps = 4
+    page_b = cfg.num_layers * cfg.cache_bytes(1, ps)
+    # room for exactly 7 pages above one streaming layer: three 1-page
+    # prompts admit but grow to 4 pages each over decode -> preemption
+    budget = other + 7 * page_b + layer_b
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 300, (4,)) for _ in range(3)]
+    sched, rids, outs, stats = _serve(
+        path, cfg, prompts, [12] * 3, budget=budget, page_size=ps,
+        max_inflight=3, prefix_cache=False, seed=8)
+    assert stats.preemptions >= 1
+    for i, rid in enumerate(rids):
+        assert len(outs[rid]) == 4 + 12
+        assert sched.ledger.audit_residue("kv_pages", f"req{rid}") == 0
+        assert sched.ledger.audit_residue("spec_headroom",
+                                          f"req{rid}") == 0
+    assert_drained(sched.ledger, "kv_pages", "stream",
+                   base=sched.ledger.resident)
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# the audit must observe, never steer
+# ---------------------------------------------------------------------------
+def test_audit_on_vs_off_identity(gpt2s, monkeypatch):
+    """Tokens and every accounting outcome are bitwise identical with
+    the audit enabled and disabled — frame-walking and event recording
+    never change what the engine computes."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 300, (8,)) for _ in range(3)]
+
+    def go(audit):
+        monkeypatch.setenv("REPRO_LEDGER_AUDIT", "1" if audit else "0")
+        sched, rids, outs, stats = _serve(path, cfg, prompts, [4] * 3,
+                                          page_size=4, seed=11)
+        assert (sched.ledger.audit is not None) is audit
+        sched.close()
+        return [np.asarray(outs[r]) for r in rids], stats
+
+    outs0, s0 = go(False)
+    outs1, s1 = go(True)
+    for a, b in zip(outs0, outs1):
+        np.testing.assert_array_equal(a, b)
+    assert [p[:3] for p in s0.policy] == [p[:3] for p in s1.policy]
+    assert (s0.new_tokens, s0.rounds, s0.pages_allocated,
+            s0.peak_bytes, s0.peak_breakdown) == \
+           (s1.new_tokens, s1.rounds, s1.pages_allocated,
+            s1.peak_bytes, s1.peak_breakdown)
+
+
+# ---------------------------------------------------------------------------
+# peak breakdown: shares sum EXACTLY to the recorded peak
+# ---------------------------------------------------------------------------
+def test_peak_breakdown_sums_exactly_to_peak(gpt2s):
+    cfg, path = gpt2s
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 300, (8,)) for _ in range(2)]
+    sched, _, _, stats = _serve(path, cfg, prompts, [4] * 2,
+                                page_size=4, seed=2)
+    assert stats.peak_bytes > 0
+    assert set(stats.peak_breakdown) <= set(LEDGER_OWNERS) | {"untagged"}
+    assert sum(stats.peak_breakdown.values()) == stats.peak_bytes
+    assert all(b > 0 for b in stats.peak_breakdown.values())
+    sched.close()
+
+
+def test_peak_breakdown_engine_run(gpt2s):
+    """The engine-level RunStats carries the same exact attribution."""
+    cfg, path = gpt2s
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 300, (1, 8))
+    with PipeloadEngine(path, cfg, mode="pipeload", num_agents=2) as eng:
+        _, stats = eng.run_generate(toks, 4, kv_cache=True)
+    assert sum(stats.peak_breakdown.values()) == stats.peak_bytes
+    assert "kv_pages" in stats.peak_breakdown

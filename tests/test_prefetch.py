@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import pytest
 from helpers.hypothesis_compat import given, settings, st
+from helpers.ledger import assert_drained
 
 from repro.checkpoint import load_manifest, partition_and_save
 from repro.configs import get_config
@@ -72,7 +73,7 @@ def test_load_fault_drains_exact(n, workers, budget_slots, fail):
     with PrefetchRuntime(workers=workers, name="t") as rt:
         err = _run_round(rt, keys, sizes, ledger, fail_load=fail % n)
         assert isinstance(err, IOError)
-        assert ledger.resident == base
+        assert_drained(ledger, "stream", base=base)
 
 
 @settings(max_examples=10, deadline=None)
@@ -87,7 +88,7 @@ def test_consumer_fault_drains_exact(n, workers, fail, budgeted):
     with PrefetchRuntime(workers=workers, name="t") as rt:
         err = _run_round(rt, keys, sizes, ledger, fail_apply=fail % n)
         assert isinstance(err, RuntimeError)
-        assert ledger.resident == base
+        assert_drained(ledger, "stream", base=base)
 
 
 @settings(max_examples=10, deadline=None)
@@ -100,7 +101,7 @@ def test_cancellation_drains_exact(n, cancel):
     with PrefetchRuntime(workers=2, name="t") as rt:
         assert _run_round(rt, keys, sizes, ledger,
                           cancel_at=cancel % n) is None
-        assert ledger.resident == 0
+        assert_drained(ledger)
 
 
 def test_happy_path_in_order_and_exact():
@@ -108,7 +109,7 @@ def test_happy_path_in_order_and_exact():
     ledger = _Ledger(2 * (max(sizes) + 1))
     with PrefetchRuntime(workers=3, name="t") as rt:
         assert _run_round(rt, keys, sizes, ledger) is None
-    assert ledger.resident == 0
+    assert_drained(ledger)
     assert ledger.peak <= ledger.budget
 
 
@@ -118,7 +119,7 @@ def test_preloaded_entries_never_charged():
     pre = {0: {"w": "resident0"}, 2: {"w": "resident2"}}
     with PrefetchRuntime(workers=2, name="t") as rt:
         assert _run_round(rt, keys, sizes, ledger, preloaded=pre) is None
-    assert ledger.resident == 0
+    assert_drained(ledger)
     assert ledger.peak <= sizes[1] + sizes[3]
 
 
@@ -135,9 +136,10 @@ def test_keep_transfers_ownership():
                 kept.append(stream.wait(k))
                 stream.keep(k)
         assert ledger.resident == sum(sizes)     # still ours
+        assert ledger.by_owner["stream"] == sum(sizes)
         for nb in sizes:
-            ledger.release(nb)
-    assert ledger.resident == 0
+            ledger.release(nb, owner="stream")
+    assert_drained(ledger)
 
 
 def test_transient_fault_retries_to_success():
@@ -159,7 +161,7 @@ def test_transient_fault_retries_to_success():
         with stream:
             for k in range(5):
                 stream.destroy(k, stream.wait(k))
-    assert ledger.resident == 0
+    assert_drained(ledger)
     assert all(n == 3 for n in attempts.values())
 
 
@@ -169,7 +171,7 @@ def test_retries_exhausted_still_drains():
     with PrefetchRuntime(workers=2, name="t") as rt:
         err = _run_round(rt, keys, sizes, ledger, fail_load=1, retries=2)
         assert isinstance(err, IOError)
-    assert ledger.resident == 0
+    assert_drained(ledger)
 
 
 def test_env_fault_injection(monkeypatch):
@@ -182,7 +184,7 @@ def test_env_fault_injection(monkeypatch):
         with stream:
             with pytest.raises(PrefetchFault):
                 stream.wait(0)
-    assert ledger.resident == 0
+    assert_drained(ledger)
 
 
 def test_timed_load_and_submit():
@@ -211,7 +213,7 @@ def test_demand_submit_never_queues_behind_parked_stream():
                 # demand pool must still serve the consumer
                 assert rt.submit(lambda v=k: v).result(timeout=10) == k
                 stream.destroy(k, w)
-    assert ledger.resident == 0
+    assert_drained(ledger)
 
 
 def test_close_idempotent_and_joins_threads():
@@ -271,12 +273,12 @@ def test_faulting_load_releases_ledger(tiny):
         with pytest.raises(IOError):
             eng._run_pipeline(x, ledger, events, time.perf_counter(),
                               destroy=True)
-        assert ledger.resident == base
+        assert_drained(ledger, "stream", base=base)
         # and the engine recovers: the next round serves normally
         eng._load = orig
         eng._run_pipeline(x, ledger, events, time.perf_counter(),
                           destroy=True)
-        assert ledger.resident == base
+        assert_drained(ledger, "stream", base=base)
 
 
 def test_consumer_fault_mid_round_releases_ledger(tiny):
@@ -293,7 +295,7 @@ def test_consumer_fault_mid_round_releases_ledger(tiny):
         with pytest.raises(RuntimeError):
             eng._run_pipeline(x, ledger, events, time.perf_counter(),
                               destroy=True, apply_fn=exploding)
-        assert ledger.resident == base
+        assert_drained(ledger, "stream", base=base)
 
 
 def test_engine_close_joins_runtime(tiny):
@@ -360,8 +362,9 @@ def test_concurrent_fetch_no_double_charge(moe_ckpt):
     assert not errs
     # every resident byte charged exactly once
     assert ledger.resident == es.cache.resident
+    assert ledger.by_owner["expert_cache"] == es.cache.resident
     es.clear()
-    assert ledger.resident == 0
+    assert_drained(ledger, "expert_cache")
     es.close()
 
 
